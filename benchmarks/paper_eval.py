@@ -1,0 +1,142 @@
+"""Paper evaluation reproductions: Table 1 (JCR), Fig 3 (JCT percentiles),
+Fig 4 (utilization CDF). One function per paper table/figure.
+
+Defaults are CI-sized (runs=3, 200 jobs); pass --full for the paper's
+100-run averaging.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.allocator import make_policy
+from repro.sim.metrics import aggregate, summarize, utilization_cdf
+from repro.sim.simulator import Simulator
+from repro.traces.generator import TraceConfig, generate_trace
+
+# Policy matrix as evaluated by the paper.
+TABLE1_CONFIGS = [
+    ("FirstFit (16^3)", "firstfit", dict(dims=(16, 16, 16))),
+    ("Folding (16^3)", "folding", dict(dims=(16, 16, 16))),
+    ("Reconfig (8^3)", "reconfig", dict(num_xpus=4096, cube_n=8)),
+    ("RFold (8^3)", "rfold", dict(num_xpus=4096, cube_n=8)),
+    ("Reconfig (4^3)", "reconfig", dict(num_xpus=4096, cube_n=4)),
+    ("RFold (4^3)", "rfold", dict(num_xpus=4096, cube_n=4)),
+]
+
+# Fig 3 compares JCT only where JCR == 100%.
+FIG3_CONFIGS = [
+    ("Reconfig (4^3)", "reconfig", dict(num_xpus=4096, cube_n=4)),
+    ("RFold (4^3)", "rfold", dict(num_xpus=4096, cube_n=4)),
+    ("Reconfig (2^3)", "reconfig", dict(num_xpus=4096, cube_n=2)),
+    ("RFold (2^3)", "rfold", dict(num_xpus=4096, cube_n=2)),
+]
+
+PAPER_TABLE1 = {   # paper-reported Avg JCR (%)
+    "FirstFit (16^3)": 10.4, "Folding (16^3)": 44.11,
+    "Reconfig (8^3)": 31.46, "RFold (8^3)": 73.35,
+    "Reconfig (4^3)": 100.0, "RFold (4^3)": 100.0,
+}
+
+
+def _run_policy(label: str, name: str, kw: dict, runs: int,
+                num_jobs: int, load: float, seed0: int):
+    summaries, cdfs = [], []
+    for r in range(runs):
+        cfg = TraceConfig(num_jobs=num_jobs, seed=seed0 + r,
+                          target_load=load)
+        pol = make_policy(name, **kw)
+        res = Simulator(pol, generate_trace(cfg)).run()
+        summaries.append(summarize(res))
+        cdfs.append(utilization_cdf(res))
+    agg = aggregate(summaries)
+    levels = cdfs[0][0]
+    cdf = np.mean([c for _, c in cdfs], axis=0)
+    return agg, (levels, cdf)
+
+
+def table1_jcr(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
+               seed0: int = 100, emit=print) -> Dict[str, Dict]:
+    emit("# Table 1 — Job Completion Rate (avg over %d runs)" % runs)
+    emit("policy,jcr_pct,paper_jcr_pct")
+    out = {}
+    for label, name, kw in TABLE1_CONFIGS:
+        agg, _ = _run_policy(label, name, kw, runs, num_jobs, load, seed0)
+        out[label] = agg
+        emit("%s,%.2f,%.2f" % (label, 100 * agg["jcr"], PAPER_TABLE1[label]))
+    return out
+
+
+def fig3_jct(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
+             seed0: int = 100, emit=print) -> Dict[str, Dict]:
+    emit("# Fig 3 — JCT p50/p90/p99 (policies with 100%% JCR)")
+    emit("policy,jct_p50_s,jct_p90_s,jct_p99_s")
+    out = {}
+    for label, name, kw in FIG3_CONFIGS:
+        agg, _ = _run_policy(label, name, kw, runs, num_jobs, load, seed0)
+        out[label] = agg
+        emit("%s,%.0f,%.0f,%.0f" % (label, agg["jct_p50"], agg["jct_p90"],
+                                    agg["jct_p99"]))
+    for n in ("4^3", "2^3"):
+        rc, rf = out.get(f"Reconfig ({n})"), out.get(f"RFold ({n})")
+        if rc and rf:
+            emit("ratio Reconfig/RFold (%s): p50=%.1fx p90=%.1fx p99=%.1fx "
+                 "(paper 4^3: 11x/6x/2x, 2^3: <=1.3x)"
+                 % (n, rc["jct_p50"] / rf["jct_p50"],
+                    rc["jct_p90"] / rf["jct_p90"],
+                    rc["jct_p99"] / rf["jct_p99"]))
+    return out
+
+
+def fig4_utilization(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
+                     seed0: int = 100, emit=print) -> Dict[str, Dict]:
+    emit("# Fig 4 — cluster utilization (time-weighted)")
+    emit("policy,util_mean,util_p50,util_p90")
+    out = {}
+    for label, name, kw in TABLE1_CONFIGS:
+        agg, cdf = _run_policy(label, name, kw, runs, num_jobs, load, seed0)
+        out[label] = {"agg": agg, "cdf": [list(map(float, c)) for c in cdf]}
+        emit("%s,%.3f,%.3f,%.3f" % (label, agg["util_mean"], agg["util_p50"],
+                                    agg["util_p90"]))
+    ff = out["FirstFit (16^3)"]["agg"]["util_mean"]
+    rc = out["Reconfig (4^3)"]["agg"]["util_mean"]
+    rf = out["RFold (4^3)"]["agg"]["util_mean"]
+    emit("RFold - FirstFit = +%.1f pts absolute (paper: +57)"
+         % (100 * (rf - ff)))
+    emit("RFold - Reconfig = +%.1f pts absolute (paper: +20)"
+         % (100 * (rf - rc)))
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--num-jobs", type=int, default=200)
+    ap.add_argument("--load", type=float, default=1.5)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale averaging (100 runs, 500 jobs)")
+    ap.add_argument("--out", type=str, default="")
+    ap.add_argument("--which", type=str, default="all",
+                    choices=["all", "table1", "fig3", "fig4"])
+    args = ap.parse_args(argv)
+    runs, n = (100, 500) if args.full else (args.runs, args.num_jobs)
+    t0 = time.time()
+    results = {}
+    if args.which in ("all", "table1"):
+        results["table1"] = table1_jcr(runs, n, args.load)
+    if args.which in ("all", "fig3"):
+        results["fig3"] = fig3_jct(runs, n, args.load)
+    if args.which in ("all", "fig4"):
+        results["fig4"] = fig4_utilization(runs, n, args.load)
+    print(f"# total {time.time() - t0:.0f}s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Generate markdown tables for EXPERIMENTS.md from experiments/
+artifacts (dry-run JSONs, roofline JSON, paper_eval JSON)."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+ARCH_ORDER = [
+    "phi4-mini-3.8b", "llama3-8b", "deepseek-v2-236b", "qwen1.5-110b",
+    "zamba2-1.2b", "llama4-scout-17b-a16e", "olmo-1b", "musicgen-medium",
+    "xlstm-1.3b", "qwen2-vl-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(dryrun_dir: str) -> str:
+    rows = {}
+    for path in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    lines = ["| arch | shape | 16x16 compile | 2x16x16 compile | "
+             "collective bytes/chip (1-pod) | HLO coll ops |",
+             "|---|---|---|---|---|---|"]
+    n_ok = 0
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = rows.get((a, s, "single"))
+            r2 = rows.get((a, s, "multi"))
+            if r1:
+                n_ok += 1
+            coll = r1["collectives"]["total_bytes"] if r1 else None
+            cnt = r1["collectives"]["total_count"] if r1 else "-"
+            lines.append(
+                f"| {a} | {s} | "
+                f"{'%.0fs' % r1['compile_s'] if r1 else 'MISSING'} | "
+                f"{'%.0fs' % r2['compile_s'] if r2 else 'MISSING'} | "
+                f"{_fmt_bytes(coll)} | {cnt} |")
+    lines.append(f"\n{n_ok}/40 single-pod + "
+                 f"{sum(1 for k in rows if k[2] == 'multi')}/40 multi-pod "
+                 "combinations compiled.")
+    return "\n".join(lines)
+
+
+def roofline_table(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    by_key = {(r["arch"], r["shape"]): r for r in rows}
+    lines = ["| arch | shape | compute (ms) | memory (ms) | "
+             "collective (ms) | dominant | useful ratio |",
+             "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = by_key.get((a, s))
+            if not r:
+                continue
+            lines.append(
+                "| %s | %s | %.2f | %.2f | %.2f | **%s** | %.2f |" % (
+                    a, s, 1e3 * r["t_compute_s"], 1e3 * r["t_memory_s"],
+                    1e3 * r["t_collective_s"], r["dominant"],
+                    r["useful_ratio"]))
+    # summary of dominant terms
+    counts = defaultdict(int)
+    for r in rows:
+        counts[r["dominant"]] += 1
+    lines.append("\nDominant-term census: " + ", ".join(
+        f"{k}: {v}" for k, v in sorted(counts.items())))
+    return "\n".join(lines)
+
+
+def paper_table(path: str) -> str:
+    with open(path) as f:
+        res = json.load(f)
+    out = []
+    if "table1" in res:
+        paper = {"FirstFit (16^3)": 10.4, "Folding (16^3)": 44.11,
+                 "Reconfig (8^3)": 31.46, "RFold (8^3)": 73.35,
+                 "Reconfig (4^3)": 100.0, "RFold (4^3)": 100.0}
+        out.append("| Policy | Paper JCR % | Ours JCR % |")
+        out.append("|---|---|---|")
+        for k, v in res["table1"].items():
+            out.append(f"| {k} | {paper[k]} | {100 * v['jcr']:.1f} |")
+    if "fig3" in res:
+        out.append("\n| Policy | JCT p50 | p90 | p99 |")
+        out.append("|---|---|---|---|")
+        for k, v in res["fig3"].items():
+            out.append(f"| {k} | {v['jct_p50']:.0f} | {v['jct_p90']:.0f} "
+                       f"| {v['jct_p99']:.0f} |")
+    if "fig4" in res:
+        out.append("\n| Policy | util mean | p50 | p90 |")
+        out.append("|---|---|---|---|")
+        for k, v in res["fig4"].items():
+            a = v["agg"]
+            out.append(f"| {k} | {a['util_mean']:.3f} | {a['util_p50']:.3f}"
+                       f" | {a['util_p90']:.3f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", default="all",
+                    choices=["all", "dryrun", "roofline", "paper"])
+    args = ap.parse_args()
+    if args.which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table("experiments/dryrun"))
+    if args.which in ("all", "roofline") and \
+            os.path.exists("experiments/roofline.json"):
+        print("\n### Roofline baseline\n")
+        print(roofline_table("experiments/roofline.json"))
+    if args.which in ("all", "paper") and \
+            os.path.exists("experiments/paper_eval.json"):
+        print("\n### Paper validation\n")
+        print(paper_table("experiments/paper_eval.json"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Roofline analysis (deliverable g) from the dry-run JSON artifacts.
+
+Per (arch x shape x mesh):
+  compute    = HLO_FLOPs_per_chip / 197e12         [s]
+  memory     = HLO_bytes_per_chip / 819e9          [s]
+  collective = collective_bytes_per_chip / 50e9    [s]
+(cost_analysis reports per-partition quantities under SPMD; scan-hidden
+trip counts are recovered by the unrolled depth probes — see
+launch/dryrun.py.)
+
+MODEL_FLOPS = 6*N*D for training (2*N*D forward-only for prefill/decode),
+with N = active params for MoE. The ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat / redundant compute.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (conservative per-axis)
+
+SUGGESTIONS = {
+    "compute": ("compute-bound: raise MXU utilization (bigger per-chip "
+                "tiles, fused kernels) or add chips"),
+    "memory": ("HBM-bound: cut activation traffic (fusion, remat policy, "
+               "bf16 masters) or raise arithmetic intensity with larger "
+               "microbatches"),
+    "collective": ("collective-bound: reshard to cut cross-chip traffic "
+                   "(fewer all-gathers per layer, overlap collectives "
+                   "with compute, or shrink the sharded axis)"),
+}
+
+
+def model_param_counts(arch: str):
+    """(total_params, active_params) from the real param tree."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as lm
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: lm.init_model(cfg, jax.random.PRNGKey(0)))
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if cfg.n_experts and "moe" in keys and any(
+                dim == cfg.n_experts for dim in leaf.shape):
+            routed += n
+    if cfg.n_experts:
+        active = total - routed + routed * (cfg.moe_top_k / cfg.n_experts)
+    else:
+        active = total
+    return float(total), float(active)
+
+
+def tokens_for(shape_name: str) -> float:
+    from repro.configs.shapes import SHAPES
+    sh = SHAPES[shape_name]
+    if sh.kind in ("train", "prefill"):
+        return float(sh.global_batch * sh.seq_len)
+    return float(sh.global_batch)  # decode: one token per sequence
+
+
+def roofline_row(res: Dict[str, Any],
+                 counts_cache: Dict[str, Any]) -> Dict[str, Any]:
+    arch, shape_name = res["arch"], res["shape"]
+    chips = res["chips"]
+    probes = res.get("probes") or {}
+    ex = probes.get("extrapolated") or {
+        "flops": res.get("flops") or 0.0,
+        "bytes": res.get("bytes_accessed") or 0.0,
+        "collective_bytes": res["collectives"]["total_bytes"],
+    }
+    t_compute = ex["flops"] / PEAK_FLOPS
+    t_memory = ex["bytes"] / HBM_BW
+    t_coll = ex["collective_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    if arch not in counts_cache:
+        counts_cache[arch] = model_param_counts(arch)
+    total_p, active_p = counts_cache[arch]
+    toks = tokens_for(shape_name)
+    mult = 6.0 if shape_name.startswith("train") else 2.0
+    model_flops_per_chip = mult * active_p * toks / chips
+    ratio = model_flops_per_chip / ex["flops"] if ex["flops"] else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": res["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": model_flops_per_chip,
+        "hlo_flops_per_chip": ex["flops"],
+        "useful_ratio": ratio,
+        "suggestion": SUGGESTIONS[dominant],
+        "compile_s": res.get("compile_s"),
+    }
+
+
+def load_rows(dryrun_dir: str, mesh: Optional[str] = "single"
+              ) -> List[Dict[str, Any]]:
+    counts: Dict[str, Any] = {}
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        if mesh and res.get("mesh") != mesh:
+            continue
+        rows.append(roofline_row(res, counts))
+    return rows
+
+
+def format_table(rows: List[Dict[str, Any]]) -> str:
+    hdr = ("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+           "dominant,useful_ratio")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            "%s,%s,%s,%.3f,%.3f,%.3f,%s,%.2f" % (
+                r["arch"], r["shape"], r["mesh"],
+                1e3 * r["t_compute_s"], 1e3 * r["t_memory_s"],
+                1e3 * r["t_collective_s"], r["dominant"],
+                r["useful_ratio"]))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    args = ap.parse_args(argv)
+    rows = load_rows(args.dryrun_dir, args.mesh or None)
+    print(format_table(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+        print(f"# wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

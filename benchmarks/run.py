@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one section per paper table/figure plus the
+framework microbenches (``name,us_per_call,derived`` CSV) and the
+roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run            # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale averaging (100 runs)")
+    ap.add_argument("--runs", type=int, default=2)
+    ap.add_argument("--num-jobs", type=int, default=120)
+    ap.add_argument("--skip-paper", action="store_true")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from benchmarks import kernels_bench, paper_eval, roofline
+
+    os.makedirs("experiments", exist_ok=True)
+    if not args.skip_paper:
+        print("=" * 70)
+        print("## Paper evaluation (Table 1 / Fig 3 / Fig 4)")
+        eval_args = ["--runs", str(args.runs),
+                     "--num-jobs", str(args.num_jobs)]
+        if args.full:
+            eval_args = ["--full"]
+        paper_eval.main(eval_args + ["--out",
+                                     "experiments/paper_eval.json"])
+
+    if not args.skip_micro:
+        print("=" * 70)
+        print("## Microbenchmarks (CPU; Pallas kernels are TPU-targeted)")
+        kernels_bench.main()
+
+    print("=" * 70)
+    print("## Roofline summary (from dry-run artifacts)")
+    if os.path.isdir("experiments/dryrun") and \
+            os.listdir("experiments/dryrun"):
+        roofline.main(["--dryrun-dir", "experiments/dryrun",
+                       "--mesh", "single",
+                       "--out", "experiments/roofline.json"])
+    else:
+        print("(no dry-run artifacts yet: run "
+              "`python -m repro.launch.dryrun --all --mesh both`)")
+
+    print(f"# benchmarks total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: train a tiny model for a few steps, then generate.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.models import model as lm
+from repro.serve import engine
+from repro.train.data import synthetic_batches
+from repro.train.optim import OptimConfig, init_opt_state
+from repro.train.train_step import train_step
+
+
+def main():
+    cfg = smoke_variant(get_config("olmo-1b")).replace(dtype="float32")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    opt_cfg = OptimConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+    opt = init_opt_state(params)
+    data = synthetic_batches(cfg, batch=4, seq=64, seed=0)
+    step = jax.jit(lambda p, o, b: train_step(cfg, opt_cfg, p, o, b))
+    for i in range(10):
+        params, opt, m = step(params, opt, next(data))
+        print(f"step {i}: ce={float(m['ce']):.3f} "
+              f"grad_norm={float(m['grad_norm']):.2f}")
+    prompt = jnp.array([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32)
+    out = engine.greedy_decode(cfg, params, prompt, steps=8)
+    print("generated:", out[0, 8:].tolist())
+
+
+if __name__ == "__main__":
+    main()

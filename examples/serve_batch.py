@@ -1,0 +1,38 @@
+"""Batched serving demo: KV-cache decode over mixed request lengths.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.configs.shapes import cache_window, smoke_shape
+from repro.models import model as lm
+from repro.serve import engine
+
+
+def main():
+    cfg = smoke_variant(get_config("llama3-8b")).replace(dtype="float32")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch, prompt_len, gen = 8, 32, 32
+    prompts = jnp.array(rng.integers(0, cfg.vocab_size,
+                                     (batch, prompt_len)), jnp.int32)
+    t0 = time.time()
+    out = engine.greedy_decode(cfg, params, prompts, steps=gen)
+    dt = time.time() - t0
+    print(f"served {batch} requests x {gen} new tokens in {dt:.1f}s "
+          f"({batch * gen / dt:.1f} tok/s on CPU)")
+    print("first output:", out[0, prompt_len:prompt_len + 8].tolist())
+    # sliding-window variant (long-context serving mode)
+    cfg_w = cfg.replace(sliding_window=16)
+    out_w = engine.greedy_decode(cfg_w, params, prompts, steps=4,
+                                 window=16)
+    print("sliding-window decode ok:", out_w.shape)
+
+
+if __name__ == "__main__":
+    main()

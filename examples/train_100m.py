@@ -1,0 +1,31 @@
+"""End-to-end driver: train a ~100M-parameter OLMo-family model on the
+synthetic pipeline for a few hundred steps (CPU-runnable; the same
+driver runs full configs under the production mesh on a pod).
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+
+from repro.launch import train as train_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+    # ~105M params: 4 layers, d=768, OLMo vocab (50304) dominates.
+    train_launcher.main([
+        "--arch", "olmo-1b", "--smoke",
+        "--d-model", "768", "--n-layers", "4",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--lr", "3e-4",
+        "--ckpt", "experiments/train_100m/ckpt.npz",
+        "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    main()

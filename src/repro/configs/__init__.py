@@ -1,0 +1,3 @@
+from __future__ import annotations
+
+from .base import all_configs, get_config, smoke_variant  # noqa: F401

@@ -1,0 +1,10 @@
+"""Importing this module registers every assigned architecture."""
+from . import (deepseek_v2_236b, llama3_8b, llama4_scout_17b_a16e,  # noqa
+               musicgen_medium, olmo_1b, phi4_mini_3_8b, qwen1_5_110b,
+               qwen2_vl_7b, xlstm_1_3b, zamba2_1_2b)
+
+ARCH_IDS = [
+    "phi4-mini-3.8b", "llama3-8b", "deepseek-v2-236b", "qwen1.5-110b",
+    "zamba2-1.2b", "llama4-scout-17b-a16e", "olmo-1b", "musicgen-medium",
+    "xlstm-1.3b", "qwen2-vl-7b",
+]

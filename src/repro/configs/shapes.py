@@ -1,0 +1,101 @@
+"""Assigned input shapes and their input specs.
+
+Shapes drive different step functions:
+  train_4k     -> train_step   (full forward + backward + optimizer)
+  prefill_32k  -> prefill_step (full forward, no grad)
+  decode_32k   -> serve_step   (ONE token, KV/recurrent state of seq_len)
+  long_500k    -> serve_step   (ONE token; sub-quadratic state: sliding
+                  window for attention archs, O(1) recurrent for SSM)
+
+``batch_specs`` returns ShapeDtypeStructs (dry-run: no allocation);
+``concrete_batch`` materializes small real arrays for smoke tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cache_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """KV-cache buffer length for decode shapes. long_500k must be
+    sub-quadratic: attention archs use the sliding window; recurrent
+    archs keep O(1) state (window only sizes any attention sub-blocks,
+    e.g. zamba2's shared attention)."""
+    if shape.name == "long_500k":
+        w = cfg.sliding_window or 8192
+        return min(w, shape.seq_len)
+    return shape.seq_len
+
+
+def _token_spec(cfg: ModelConfig, b: int, s: int):
+    if cfg.arch_type == "audio":
+        return jax.ShapeDtypeStruct((b, cfg.n_codebooks, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's batch arg."""
+    b = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        s = shape.seq_len
+        out: Dict[str, Any] = {"tokens": _token_spec(cfg, b, s)}
+        if shape.kind == "train":
+            out["targets"] = _token_spec(cfg, b, s)
+        if cfg.pos_type == "mrope":
+            out["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+        return out
+    # decode: one new token at position seq_len-1
+    out = {"tokens": _token_spec(cfg, b, 1)}
+    if cfg.pos_type == "mrope":
+        out["positions"] = jax.ShapeDtypeStruct((b, 1, 3), jnp.int32)
+    else:
+        out["positions"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return out
+
+
+def concrete_batch(cfg: ModelConfig, shape: InputShape,
+                   seed: int = 0) -> Dict[str, Any]:
+    """Small real arrays matching batch_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, spec in specs.items():
+        if k == "positions":
+            if spec.shape[-1] == 3 and len(spec.shape) == 3:
+                base = np.arange(spec.shape[1], dtype=np.int32)
+                pos = np.broadcast_to(base[None, :, None], spec.shape)
+                out[k] = jnp.array(pos)
+            else:
+                base = np.arange(spec.shape[1], dtype=np.int32)
+                out[k] = jnp.array(np.broadcast_to(base[None], spec.shape))
+        else:
+            out[k] = jnp.array(rng.integers(
+                0, cfg.vocab_size, size=spec.shape, dtype=np.int32))
+    return out
+
+
+def smoke_shape(kind: str = "train", seq: int = 32,
+                batch: int = 2) -> InputShape:
+    return InputShape(f"smoke_{kind}", seq, batch, kind)

@@ -1,0 +1,62 @@
+"""Free-box ("fit mask") search over an occupancy grid.
+
+Given a bool occupancy grid and a box shape (a, b, c), compute for every
+un-wrapped origin whether the a×b×c window is entirely free. This is the
+allocator's hot spot: FirstFit, Folding and Reconfig all reduce to it.
+
+Engine selection:
+  * ``numpy`` (default here) — integral-image window sums; the simulator
+    calls this thousands of times with *varying* box shapes, so a
+    trace-free engine is the right choice on CPU.
+  * ``repro.kernels.fitmask`` — the Pallas TPU kernel (one fused
+    VMEM pass, batched over grids) with a ``jax.lax.reduce_window``
+    oracle; tests assert all engines agree.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .geometry import Coord, Dims
+
+
+def window_sums(occ: np.ndarray, box: Dims) -> np.ndarray:
+    """Sum of ``occ`` over every un-wrapped a×b×c window.
+
+    occ: bool/int array (X, Y, Z). Returns int array of shape
+    (X-a+1, Y-b+1, Z-c+1); empty if the box does not fit at all.
+    """
+    a, b, c = box
+    X, Y, Z = occ.shape
+    if a > X or b > Y or c > Z:
+        return np.zeros((max(X - a + 1, 0), max(Y - b + 1, 0),
+                         max(Z - c + 1, 0)), dtype=np.int64)
+    ii = np.zeros((X + 1, Y + 1, Z + 1), dtype=np.int64)
+    ii[1:, 1:, 1:] = occ.astype(np.int64)
+    np.cumsum(ii, axis=0, out=ii)
+    np.cumsum(ii, axis=1, out=ii)
+    np.cumsum(ii, axis=2, out=ii)
+    s = (ii[a:, b:, c:] - ii[:-a, b:, c:] - ii[a:, :-b, c:] - ii[a:, b:, :-c]
+         + ii[:-a, :-b, c:] + ii[:-a, b:, :-c] + ii[a:, :-b, :-c]
+         - ii[:-a, :-b, :-c])
+    return s
+
+
+def fit_mask(occ: np.ndarray, box: Dims) -> np.ndarray:
+    """Bool mask over origins where the box fits in free space."""
+    return window_sums(occ, box) == 0
+
+
+def first_fit_origin(occ: np.ndarray, box: Dims) -> Optional[Coord]:
+    """Lexicographically-first free origin, or None."""
+    m = fit_mask(occ, box)
+    if m.size == 0 or not m.any():
+        return None
+    flat = int(np.argmax(m))  # first True in C order == lexicographic
+    return tuple(int(v) for v in np.unravel_index(flat, m.shape))  # type: ignore[return-value]
+
+
+def count_fits(occ: np.ndarray, box: Dims) -> int:
+    m = fit_mask(occ, box)
+    return int(m.sum())

@@ -1,0 +1,343 @@
+"""Reconfigurable torus: hardwired N³ cubes stitched by OCS groups.
+
+Model (paper §2 / §3.2, TPU-v4-like): the cluster is ``num_cubes``
+hardwired N×N×N cubes. Each XPU has 6 ports; the two opposing ports at
+the same face position connect to the same optical circuit switch, so a
+cube face can either loop back onto itself (wrap-around) or chain to the
+*same face position* of another cube. Consequences we model faithfully:
+
+  * A job spanning cubes must use a **uniform corner offset** in every
+    cube (the port-alignment constraint: face XPUs only connect to the
+    corresponding XPU of the next cube).
+  * Wrap-around links exist for a job dimension only when it spans a
+    full chain of cubes (extent == k·N and offset 0 on that axis).
+  * Only face XPUs can reach other cubes: a piece that crosses a cube
+    boundary necessarily occupies the face cells there — free "core"
+    XPUs behind occupied faces are unusable for multi-cube jobs.
+  * The OCS layer is modelled as a full per-face-position crossbar
+    (assumption noted in DESIGN.md): any free cube can occupy any
+    position of the job's virtual cube grid.
+  * **Cube ownership**: a cube chained into a multi-cube virtual torus
+    has its face OCS wiring dedicated to that job — its leftover XPUs
+    are *stranded* until the job completes. This is exactly the
+    fragmentation the paper attributes to partially-used cubes ("it
+    results in at least one partially used cube", §3.2), and what
+    folding into fewer cubes avoids. A standalone cube keeps its
+    loop-back wiring and behaves as a small static torus that several
+    single-cube jobs may share.
+
+Placement: decompose a fold's target box into per-cube pieces at a
+uniform offset, assign physical cubes to grid positions (best-fit
+packing), and score plans by the paper's heuristic — fewest cubes,
+then fewest OCS links, then least new-cube fragmentation.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .folding import Fold, WrapFlags, verify_fold
+from .geometry import Coord, Dims, volume
+
+Slice3 = Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]  # half-open
+
+
+@dataclass
+class Piece:
+    grid_pos: Coord          # position in the job's virtual cube grid
+    cube_id: int             # physical cube assigned
+    local: Slice3            # sub-block within the cube (half-open)
+
+    @property
+    def shape(self) -> Dims:
+        return tuple(hi - lo for lo, hi in self.local)  # type: ignore
+
+    @property
+    def size(self) -> int:
+        return volume(self.shape)
+
+
+@dataclass
+class ReconfigPlan:
+    fold: Fold
+    offsets: Coord                     # uniform corner offset per axis
+    cube_grid: Dims                    # virtual cube-grid extents
+    pieces: List[Piece]
+    wrap: WrapFlags                    # wrap-around availability per axis
+    broken_rings: Tuple[int, ...]      # job ring axes that cannot close
+    num_ocs_links: int
+    fresh_cubes: int                   # cubes that were previously empty
+
+    @property
+    def num_cubes(self) -> int:
+        return len(self.pieces)
+
+    def score(self) -> Tuple:
+        """Paper heuristic: fewest cubes, then fewest OCS links; prefer
+        plans with intact rings and less fresh-cube consumption."""
+        return (len(self.broken_rings), self.num_cubes, self.num_ocs_links,
+                self.fresh_cubes)
+
+
+class ReconfigTorus:
+    """Occupancy + placement over ``num_cubes`` reconfigurable cubes."""
+
+    def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
+                 dedicate_chained: bool = False):
+        if num_xpus % (cube_n ** 3):
+            raise ValueError("num_xpus must be a multiple of cube volume")
+        # If True, a cube chained into a multi-cube job is exclusively
+        # owned by it (strands leftover XPUs). Default False: the OCS is
+        # per-face-position, so leftover sub-blocks stay usable — this
+        # matches the paper's reported JCR/utilization bands best; the
+        # dedicated variant is kept as an ablation (EXPERIMENTS.md).
+        self.dedicate_chained = bool(dedicate_chained)
+        self.cube_n = int(cube_n)
+        self.num_cubes = num_xpus // (cube_n ** 3)
+        # occupancy: (num_cubes, n, n, n)
+        self.occ = np.zeros((self.num_cubes,) + (cube_n,) * 3, dtype=bool)
+        # cube dedicated to a multi-cube job's virtual torus (-1 = no)
+        self.dedicated = np.full(self.num_cubes, -1, dtype=np.int64)
+        self.allocations: Dict[int, List[Piece]] = {}
+        self.alloc_meta: Dict[int, dict] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def num_xpus(self) -> int:
+        return self.num_cubes * self.cube_n ** 3
+
+    @property
+    def busy_xpus(self) -> int:
+        return int(self.occ.sum())
+
+    def utilization(self) -> float:
+        return self.busy_xpus / self.num_xpus
+
+    @property
+    def max_extent(self) -> int:
+        """Largest placeable extent on one axis: a chain of all cubes."""
+        return self.num_cubes * self.cube_n
+
+    # ------------------------------------------------------------------
+    def _offset_candidates(self, extent: int) -> List[int]:
+        """Corner offsets on one axis that do not inflate the cube count
+        beyond ceil(extent / n)."""
+        n = self.cube_n
+        ca = -(-extent // n)
+        slack = ca * n - extent
+        return list(range(0, slack + 1))
+
+    def _pieces_for(self, box: Dims, offsets: Coord) -> List[Tuple[Coord, Slice3]]:
+        """Virtual grid positions and per-cube local sub-blocks."""
+        n = self.cube_n
+        per_axis: List[List[Tuple[int, Tuple[int, int]]]] = []
+        for ext, off in zip(box, offsets):
+            spans = []
+            lo_g, hi_g = off, off + ext
+            ncubes = -(-hi_g // n)
+            for i in range(ncubes):
+                lo = max(lo_g, i * n) - i * n
+                hi = min(hi_g, (i + 1) * n) - i * n
+                if hi > lo:
+                    spans.append((i, (lo, hi)))
+            per_axis.append(spans)
+        out = []
+        for (ix, sx), (iy, sy), (iz, sz) in itertools.product(*per_axis):
+            out.append(((ix, iy, iz), (sx, sy, sz)))
+        return out
+
+    def _block_free_mask(self, local: Slice3) -> np.ndarray:
+        """Bool mask over cubes: sub-block ``local`` entirely free."""
+        (x0, x1), (y0, y1), (z0, z1) = local
+        sub = self.occ[:, x0:x1, y0:y1, z0:z1]
+        return ~sub.any(axis=(1, 2, 3))
+
+    @staticmethod
+    def _ocs_links(box: Dims, offsets: Coord, cube_grid: Dims, n: int,
+                   wrap: WrapFlags) -> int:
+        """Inter-cube (OCS) links consumed: one per face-position at each
+        cube-boundary crossing, plus wrap closures."""
+        total = 0
+        a, b, c = box
+        cross_section = (b * c, a * c, a * b)
+        for ax in range(3):
+            crossings = cube_grid[ax] - 1
+            if wrap[ax]:
+                crossings += 1  # ring closure through the OCS
+            total += crossings * cross_section[ax]
+        return total
+
+    # ------------------------------------------------------------------
+    def place_fold(self, fold: Fold,
+                   offset_search: bool = True) -> Optional[ReconfigPlan]:
+        """Best reconfiguration plan for one fold candidate, or None.
+
+        ``offset_search=False`` pins every piece to the cube corner
+        (offset 0) — the naive Reconfig baseline whose partial-cube
+        fragmentation the paper criticises; RFold searches offsets as
+        part of "virtually reconfiguring the topology to best match the
+        shape"."""
+        box = fold.box
+        n = self.cube_n
+        if any(ext > self.max_extent for ext in box):
+            return None
+        best: Optional[ReconfigPlan] = None
+        cube_empty = ~self.occ.any(axis=(1, 2, 3))
+        single_cube = all(ext <= n for ext in box)
+        # Port alignment only binds multi-cube chains; a single-cube job
+        # is an ordinary within-cube box placement, so its offsets are
+        # always searchable. The naive (Reconfig) baseline pins chained
+        # pieces to the cube corner.
+        if offset_search or single_cube:
+            offset_space = itertools.product(*(self._offset_candidates(e)
+                                               for e in box))
+        else:
+            offset_space = [(0, 0, 0)]
+        for offsets in offset_space:
+            pieces_spec = self._pieces_for(box, offsets)
+            cube_grid = tuple(
+                max(p[0][ax] for p in pieces_spec) + 1 for ax in range(3))
+            if volume(cube_grid) > self.num_cubes:
+                continue
+            multi = len(pieces_spec) > 1
+            # Assign physical cubes: biggest pieces first, best-fit
+            # (prefer partially-used cubes with least leftover).
+            order = sorted(range(len(pieces_spec)),
+                           key=lambda i: -volume(
+                               tuple(hi - lo for lo, hi in pieces_spec[i][1])))
+            free_cnt = (~self.occ).sum(axis=(1, 2, 3)).astype(np.int64)
+            taken = np.zeros(self.num_cubes, dtype=bool)
+            assignment: Dict[int, int] = {}
+            ok = True
+            for idx in order:
+                _, local = pieces_spec[idx]
+                if multi and self.dedicate_chained:
+                    # chaining dedicates the cube: only fully-free,
+                    # non-dedicated cubes are eligible
+                    mask = cube_empty & (self.dedicated < 0) & ~taken
+                else:
+                    # per-face-position OCS: shareable; sub-block free
+                    mask = (self._block_free_mask(local)
+                            & (self.dedicated < 0) & ~taken)
+                if not mask.any():
+                    ok = False
+                    break
+                cand = np.nonzero(mask)[0]
+                piece_sz = volume(tuple(hi - lo for lo, hi in local))
+                # best-fit: least leftover; among ties prefer non-empty cubes
+                leftovers = free_cnt[cand] - piece_sz
+                keys = leftovers * 2 + cube_empty[cand].astype(np.int64)
+                chosen = int(cand[int(np.argmin(keys))])
+                assignment[idx] = chosen
+                taken[chosen] = True
+            if not ok:
+                continue
+            wrap = tuple(
+                offsets[ax] == 0 and box[ax] == cube_grid[ax] * n
+                for ax in range(3))
+            valid, broken = verify_fold(fold, wrap)  # type: ignore[arg-type]
+            if not valid:
+                continue
+            pieces = [Piece(pieces_spec[i][0], assignment[i],
+                            pieces_spec[i][1]) for i in range(len(pieces_spec))]
+            fresh = int(sum(cube_empty[p.cube_id] for p in pieces))
+            plan = ReconfigPlan(
+                fold=fold, offsets=offsets, cube_grid=cube_grid,  # type: ignore
+                pieces=pieces, wrap=wrap,  # type: ignore[arg-type]
+                broken_rings=tuple(broken),
+                num_ocs_links=self._ocs_links(box, offsets, cube_grid, n,
+                                              wrap),  # type: ignore[arg-type]
+                fresh_cubes=fresh)
+            if best is None or plan.score() < best.score():
+                best = plan
+        return best
+
+    # ------------------------------------------------------------------
+    def commit(self, job_id: int, plan: ReconfigPlan) -> None:
+        if job_id in self.allocations:
+            raise ValueError(f"job {job_id} already allocated")
+        multi = len(plan.pieces) > 1
+        for p in plan.pieces:
+            (x0, x1), (y0, y1), (z0, z1) = p.local
+            blk = self.occ[p.cube_id, x0:x1, y0:y1, z0:z1]
+            if blk.any():
+                raise ValueError("sub-block no longer free at commit")
+            if self.dedicated[p.cube_id] >= 0:
+                raise ValueError("cube already dedicated at commit")
+            if multi and self.dedicate_chained:
+                if self.occ[p.cube_id].any():
+                    raise ValueError("chained cube must be empty at commit")
+                self.dedicated[p.cube_id] = job_id
+            self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = True
+        self.allocations[job_id] = list(plan.pieces)
+        self.alloc_meta[job_id] = {
+            "fold": str(plan.fold), "kind": plan.fold.kind,
+            "box": plan.fold.box, "cube_grid": plan.cube_grid,
+            "offsets": plan.offsets, "wrap": plan.wrap,
+            "broken_rings": plan.broken_rings,
+            "num_cubes": plan.num_cubes, "ocs_links": plan.num_ocs_links,
+        }
+
+    def release(self, job_id: int) -> None:
+        for p in self.allocations.pop(job_id):
+            (x0, x1), (y0, y1), (z0, z1) = p.local
+            self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = False
+            if self.dedicated[p.cube_id] == job_id:
+                self.dedicated[p.cube_id] = -1
+        self.alloc_meta.pop(job_id, None)
+
+    # ------------------------------------------------------------------
+    def free_cells(self, limit: int):
+        """Up to ``limit`` free (cube_id, x, y, z) cells from
+        non-dedicated cubes (best-effort scatter placement)."""
+        out = []
+        for cid in range(self.num_cubes):
+            if self.dedicated[cid] >= 0:
+                continue
+            free = np.argwhere(~self.occ[cid])
+            for (x, y, z) in free:
+                out.append((cid, int(x), int(y), int(z)))
+                if len(out) >= limit:
+                    return out
+        return out
+
+    def commit_scatter(self, job_id: int, cells) -> None:
+        """Best-effort non-contiguous allocation (paper §5): occupy the
+        given cells as single-cell pieces (no shape/ring guarantee)."""
+        if job_id in self.allocations:
+            raise ValueError(f"job {job_id} already allocated")
+        pieces = []
+        for (cid, x, y, z) in cells:
+            if self.occ[cid, x, y, z]:
+                raise ValueError("cell busy at scatter commit")
+            self.occ[cid, x, y, z] = True
+            pieces.append(Piece((0, 0, 0), cid,
+                                ((x, x + 1), (y, y + 1), (z, z + 1))))
+        self.allocations[job_id] = pieces
+        self.alloc_meta[job_id] = {"kind": "scatter",
+                                   "num_cubes": len({c[0] for c in cells})}
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        ref = np.zeros_like(self.occ, dtype=np.int64)
+        for pieces in self.allocations.values():
+            for p in pieces:
+                (x0, x1), (y0, y1), (z0, z1) = p.local
+                ref[p.cube_id, x0:x1, y0:y1, z0:z1] += 1
+        if (ref > 1).any():
+            raise AssertionError("XPU double-booked across cubes")
+        if not ((ref == 1) == self.occ).all():
+            raise AssertionError("cube occupancy out of sync")
+        ded = np.full(self.num_cubes, -1, dtype=np.int64)
+        for jid, pieces in self.allocations.items():
+            if len(pieces) > 1 and self.dedicate_chained:
+                for p in pieces:
+                    if ded[p.cube_id] != -1:
+                        raise AssertionError("cube dedicated to two jobs")
+                    ded[p.cube_id] = jid
+        if not (ded == self.dedicated).all():
+            raise AssertionError("dedication registry out of sync")

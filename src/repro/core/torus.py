@@ -1,0 +1,189 @@
+"""Static 3D torus occupancy model with link-exclusivity accounting.
+
+The paper's central correctness property is that an allocation gives a
+job *exclusive* XPUs and links (that is what "enforcing the job shape"
+buys). We therefore track both node occupancy (a numpy grid — the hot
+free-box search is delegated to the fitmask kernel wrapper) and link
+ownership (a registry keyed by canonical link ids), and assert
+exclusivity on every commit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .geometry import (Coord, Dims, is_torus_neighbor, iter_box,
+                       torus_delta, volume)
+
+Link = Tuple[Coord, Coord]
+
+
+def canon_link(u: Coord, v: Coord) -> Link:
+    return (u, v) if u <= v else (v, u)
+
+
+@dataclass
+class Allocation:
+    """A committed placement.
+
+    ``coords``  — the XPUs owned by the job (order is meaningful for
+                  folded ring placements: it is the ring traversal).
+    ``links``   — torus links owned by the job.
+    ``meta``    — provenance: fold used, target box, cubes touched, etc.
+    """
+
+    job_id: int
+    coords: Tuple[Coord, ...]
+    links: FrozenSet[Link]
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def size(self) -> int:
+        return len(self.coords)
+
+
+class StaticTorus:
+    """A D1×D2×D3 torus with full wrap-around on every axis whose size
+    equals the torus dimension. Occupancy is a numpy bool grid."""
+
+    def __init__(self, dims: Dims):
+        self.dims: Dims = tuple(int(d) for d in dims)  # type: ignore[assignment]
+        self.occ = np.zeros(self.dims, dtype=bool)
+        self.owner = np.full(self.dims, -1, dtype=np.int64)
+        self.link_owner: Dict[Link, int] = {}
+        self.allocations: Dict[int, Allocation] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def num_xpus(self) -> int:
+        return volume(self.dims)
+
+    @property
+    def busy_xpus(self) -> int:
+        return int(self.occ.sum())
+
+    def utilization(self) -> float:
+        return self.busy_xpus / self.num_xpus
+
+    def wrap_flags(self) -> Tuple[bool, bool, bool]:
+        """A static torus has wrap-around links on every axis."""
+        return (True, True, True)
+
+    # ------------------------------------------------------------------
+    def is_free(self, coords: Iterable[Coord]) -> bool:
+        return not any(self.occ[c] for c in coords)
+
+    def box_free(self, origin: Coord, box: Dims) -> bool:
+        """Box fit without wrapping past the boundary."""
+        if any(o + b > d for o, b, d in zip(origin, box, self.dims)):
+            return False
+        ox, oy, oz = origin
+        a, b, c = box
+        return not self.occ[ox:ox + a, oy:oy + b, oz:oz + c].any()
+
+    def find_free_box(self, box: Dims) -> Optional[Coord]:
+        """First (lexicographic) origin where an un-wrapped a×b×c box of
+        free XPUs exists, or None. Delegates the sliding-window search
+        to the fitmask kernel wrapper (reduce_window on CPU/TPU)."""
+        from . import fitmask  # local import: kernels pull in jax
+        return fitmask.first_fit_origin(self.occ, box)
+
+    def count_free_boxes(self, box: Dims) -> int:
+        from . import fitmask
+        return fitmask.count_fits(self.occ, box)
+
+    # ------------------------------------------------------------------
+    def _links_for_box(self, origin: Coord, box: Dims) -> FrozenSet[Link]:
+        """All internal links of a contiguous box, plus wrap-around links
+        on axes where the box spans the full torus dimension."""
+        links: set[Link] = set()
+        ox, oy, oz = origin
+        a, b, c = box
+        for (x, y, z) in iter_box(origin, box):
+            if x + 1 < ox + a:
+                links.add(canon_link((x, y, z), (x + 1, y, z)))
+            elif a == self.dims[0]:
+                links.add(canon_link((ox, y, z), (x, y, z)))
+            if y + 1 < oy + b:
+                links.add(canon_link((x, y, z), (x, y + 1, z)))
+            elif b == self.dims[1]:
+                links.add(canon_link((x, oy, z), (x, y, z)))
+            if z + 1 < oz + c:
+                links.add(canon_link((x, y, z), (x, y, z + 1)))
+            elif c == self.dims[2]:
+                links.add(canon_link((x, y, oz), (x, y, z)))
+        return frozenset(links)
+
+    def links_for_ring(self, ring: Sequence[Coord]) -> FrozenSet[Link]:
+        """Links used by an ordered ring of torus-neighbouring XPUs."""
+        n = len(ring)
+        links: set[Link] = set()
+        wrap = self.wrap_flags()
+        pairs = [(ring[i], ring[(i + 1) % n]) for i in range(n)] \
+            if n > 2 else [(ring[0], ring[1])]
+        for u, v in pairs:
+            if not is_torus_neighbor(u, v, self.dims, wrap):
+                raise ValueError(f"ring hop {u}->{v} is not a torus link")
+            links.add(canon_link(u, v))
+        return links
+
+    # ------------------------------------------------------------------
+    def commit(self, job_id: int, coords: Sequence[Coord],
+               links: Iterable[Link], meta: Optional[dict] = None) -> Allocation:
+        coords = tuple(coords)
+        links = frozenset(links)
+        if len(set(coords)) != len(coords):
+            raise ValueError("duplicate XPUs in allocation")
+        for c in coords:
+            if self.occ[c]:
+                raise ValueError(f"XPU {c} already owned by {self.owner[c]}")
+        for l in links:
+            if l in self.link_owner:
+                raise ValueError(
+                    f"link {l} already owned by job {self.link_owner[l]}")
+        for c in coords:
+            self.occ[c] = True
+            self.owner[c] = job_id
+        for l in links:
+            self.link_owner[l] = job_id
+        alloc = Allocation(job_id, coords, links, dict(meta or {}))
+        self.allocations[job_id] = alloc
+        return alloc
+
+    def commit_box(self, job_id: int, origin: Coord, box: Dims,
+                   meta: Optional[dict] = None) -> Allocation:
+        coords = tuple(iter_box(origin, box))
+        links = self._links_for_box(origin, box)
+        m = {"kind": "box", "origin": origin, "box": box}
+        m.update(meta or {})
+        return self.commit(job_id, coords, links, m)
+
+    def release(self, job_id: int) -> None:
+        alloc = self.allocations.pop(job_id)
+        for c in alloc.coords:
+            self.occ[c] = False
+            self.owner[c] = -1
+        for l in alloc.links:
+            del self.link_owner[l]
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Exclusivity invariants (used by property tests)."""
+        owned = np.zeros(self.dims, dtype=np.int64)
+        for a in self.allocations.values():
+            for c in a.coords:
+                owned[c] += 1
+        if (owned > 1).any():
+            raise AssertionError("XPU double-booked")
+        if not ((owned == 1) == self.occ).all():
+            raise AssertionError("occupancy grid out of sync")
+        link_counts: Dict[Link, int] = {}
+        for a in self.allocations.values():
+            for l in a.links:
+                link_counts[l] = link_counts.get(l, 0) + 1
+        if any(v > 1 for v in link_counts.values()):
+            raise AssertionError("link double-booked")
+        if set(link_counts) != set(self.link_owner):
+            raise AssertionError("link registry out of sync")

@@ -1,0 +1,35 @@
+"""Public wrapper for fitmask: numpy engine (sim hot path), reduce_window
+oracle, and the Pallas kernel — all agree; tests sweep shapes."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fitmask as np_engine
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def fitmask(occ, box: Tuple[int, int, int], engine: str = "auto"):
+    """occ: (B, X, Y, Z) or (X, Y, Z). Returns int32 fit mask of the
+    same (batched) shape."""
+    squeeze = occ.ndim == 3
+    if squeeze:
+        occ = occ[None]
+    if engine == "numpy":
+        out = np.stack([np_engine.fit_mask(np.asarray(o), box).astype(np.int32)
+                        for o in np.asarray(occ)])
+        x, y, z = occ.shape[1:]
+        pad = [(0, 0), (0, x - out.shape[1]), (0, y - out.shape[2]),
+               (0, z - out.shape[3])]
+        out = jnp.asarray(np.pad(out, pad))
+    elif engine == "ref":
+        out = _ref.fitmask_reference(jnp.asarray(occ), box)
+    else:
+        on_tpu = jax.default_backend() == "tpu"
+        out = _kernel.fitmask_batched(jnp.asarray(occ), box,
+                                      interpret=not on_tpu)
+    return out[0] if squeeze else out

@@ -1,0 +1,26 @@
+"""jax.lax.reduce_window oracle for the fitmask kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fitmask_reference(occ: jnp.ndarray,
+                      box: Tuple[int, int, int]) -> jnp.ndarray:
+    """occ: (B, X, Y, Z). Returns (B, X, Y, Z) int32, 1 where the box
+    fits (un-wrapped), 0 elsewhere (including origins where the box
+    would overhang)."""
+    bsz, x, y, z = occ.shape
+    a, b, c = box
+    if a > x or b > y or c > z:
+        return jnp.zeros((bsz, x, y, z), jnp.int32)
+    sums = jax.lax.reduce_window(
+        occ.astype(jnp.int32), 0, jax.lax.add,
+        window_dimensions=(1, a, b, c),
+        window_strides=(1, 1, 1, 1), padding="valid")
+    fits = (sums == 0).astype(jnp.int32)
+    pad = ((0, 0), (0, x - fits.shape[1]), (0, y - fits.shape[2]),
+           (0, z - fits.shape[3]))
+    return jnp.pad(fits, pad)

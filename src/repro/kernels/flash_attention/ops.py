@@ -1,0 +1,25 @@
+"""Jit'd public wrapper: kernel on TPU, interpret-mode kernel or oracle
+on CPU (selected by backend; override with force_*)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    force_ref: bool = False,
+                    force_kernel: bool = False) -> jnp.ndarray:
+    on_tpu = jax.default_backend() == "tpu"
+    if force_ref or (not on_tpu and not force_kernel):
+        return _ref.attention_reference(q, k, v, causal=causal,
+                                        window=window)
+    return _kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=not on_tpu)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for blockwise causal attention (training layout:
+positions are arange; optional sliding window)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,T,KH,D). fp32 softmax, GQA by head groups."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None and window > 0:
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Public wrapper for the SSD scan: Pallas kernel on TPU (interpret on
+CPU when forced), chunked-jnp oracle otherwise."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int = 64,
+             d_skip: Optional[jnp.ndarray] = None,
+             force_ref: bool = False,
+             force_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    on_tpu = jax.default_backend() == "tpu"
+    if force_ref or (not on_tpu and not force_kernel):
+        return _ref.ssd_reference(x, dt, a, b, c, chunk=chunk,
+                                  d_skip=d_skip)
+    return _kernel.ssd_scan_kernel(x, dt, a, b, c, d_skip=d_skip,
+                                   chunk=chunk, interpret=not on_tpu)

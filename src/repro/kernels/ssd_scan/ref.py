@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) chunked scan.
+
+Semantics (per batch, head):
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * x_t (outer) B_t
+    y_t = C_t . S_t + D * x_t
+with S in R^{P x N} (headdim x state). The chunked form computes
+intra-chunk contributions with a causal quadratic form (MXU-friendly)
+and carries inter-chunk state with a scan — this reference is the
+ground truth for the Pallas kernel and the model layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """Causal segment-sum: out[..., t, s] = sum_{r=s+1..t} log_a[..., r]
+    for s <= t, -inf otherwise."""
+    T = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # t, s
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                  b: jnp.ndarray, c: jnp.ndarray,
+                  chunk: int = 64,
+                  d_skip: Optional[jnp.ndarray] = None,
+                  init_state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes (already softplus'ed)
+    a:  (H,)           negative decay rates (A = -exp(a_log))
+    b:  (B, S, H, N)   input projections (already group-broadcast)
+    c:  (B, S, H, N)   output projections
+    returns y (B, S, H, P), final_state (B, H, P, N)
+    """
+    B_, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    K = S // chunk
+    f32 = jnp.float32
+
+    xs = x.reshape(B_, K, chunk, H, P).astype(f32)
+    dts = dt.reshape(B_, K, chunk, H).astype(f32)
+    bs = b.reshape(B_, K, chunk, H, N).astype(f32)
+    cs = c.reshape(B_, K, chunk, H, N).astype(f32)
+
+    log_a = dts * a.astype(f32)                         # (B,K,Q,H)
+    log_a = jnp.moveaxis(log_a, -1, -2)                 # (B,K,H,Q)
+    seg = segsum(log_a)                                 # (B,K,H,Q,Q)
+
+    # intra-chunk quadratic form
+    cb = jnp.einsum("bkqhn,bkshn->bkhqs", cs, bs)       # (B,K,H,Q,Q)
+    m = cb * jnp.exp(seg) * jnp.moveaxis(dts, -1, -2)[..., None, :]
+    y_intra = jnp.einsum("bkhqs,bkshp->bkqhp", m, xs)
+
+    # per-chunk state contribution: decay from s to end of chunk
+    cum = jnp.cumsum(log_a, axis=-1)                    # (B,K,H,Q)
+    total = cum[..., -1:]                               # (B,K,H,1)
+    decay_to_end = jnp.exp(total - cum)                 # (B,K,H,Q)
+    # weight x by dt, decayed from position s to the chunk end
+    w = (jnp.moveaxis(dts, -1, -2) * decay_to_end)      # (B,K,H,Q)
+    chunk_state = jnp.einsum("bkhq,bkqhp,bkqhn->bkhpn", w, xs, bs)
+
+    # inter-chunk recurrence over K
+    chunk_decay = jnp.exp(total[..., 0])                # (B,K,H)
+
+    def step(s_prev, inp):
+        dec, st = inp                                   # (B,H), (B,H,P,N)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev                            # emit state BEFORE
+
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((B_, H, P, N), f32))
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)           # (K,B,H)
+    st_seq = jnp.moveaxis(chunk_state, 1, 0)            # (K,B,H,P,N)
+    s_final, s_prevs = jax.lax.scan(step, s0, (dec_seq, st_seq))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)               # (B,K,H,P,N)
+
+    # inter-chunk output: state entering the chunk, decayed to position t
+    state_decay = jnp.exp(cum)                          # (B,K,H,Q)
+    y_inter = jnp.einsum("bkqhn,bkhpn,bkhq->bkqhp", cs, s_prevs, state_decay)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    if d_skip is not None:
+        y = y + x.astype(f32) * d_skip.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), s_final
+
+
+def ssd_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+             a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+             d_skip: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.
+
+    state: (B,H,P,N); x: (B,H,P); dt: (B,H); b,c: (B,H,N)
+    returns (y (B,H,P), new_state)
+    """
+    f32 = jnp.float32
+    decay = jnp.exp(dt.astype(f32) * a.astype(f32))     # (B,H)
+    upd = (dt.astype(f32)[..., None, None]
+           * x.astype(f32)[..., :, None] * b.astype(f32)[..., None, :])
+    new_state = state.astype(f32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c.astype(f32))
+    if d_skip is not None:
+        y = y + x.astype(f32) * d_skip.astype(f32)[None, :, None]
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+def ssd_sequential_reference(x, dt, a, b, c, d_skip=None, init_state=None):
+    """O(S) sequential oracle (slowest, simplest) used to validate the
+    chunked form itself."""
+    B_, S, H, P = x.shape
+    N = b.shape[-1]
+    s = (init_state if init_state is not None
+         else jnp.zeros((B_, H, P, N), jnp.float32))
+    ys = []
+    for t in range(S):
+        y, s = ssd_step(s, x[:, t], dt[:, t], a, b[:, t], c[:, t], d_skip)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), s

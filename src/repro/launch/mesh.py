@@ -1,0 +1,90 @@
+"""Mesh construction: the production meshes for the dry-run, and
+RFold-driven meshes whose device order follows a folded allocation.
+
+NOTE: ``make_production_mesh`` is a function (never a module-level
+constant) so importing this module touches no jax device state.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 (256 chips) over ("data", "model"); multi-pod:
+    2x16x16 (512 chips) over ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_from_allocation(coords: Sequence[Tuple[int, int, int]],
+                         mesh_shape: Sequence[int],
+                         axes: Sequence[str],
+                         devices: Optional[List] = None) -> Mesh:
+    """Build a Mesh whose device order follows an RFold allocation.
+
+    ``coords`` is the ordered XPU list of a committed placement (ring
+    traversal order for folded placements — Allocation.coords). The
+    devices assigned to those torus coordinates are laid out in that
+    order and reshaped to ``mesh_shape``; collectives along the fastest-
+    varying mesh axis then run on torus-neighbour rings, which is
+    exactly the property folding preserves.
+
+    On this CPU container, ``devices`` defaults to jax.devices() taken
+    in index order as stand-ins for the torus grid; on a real TPU
+    deployment the caller maps torus coordinates to device ids via
+    ``jax.devices()[i].coords``.
+    """
+    coords = list(coords)
+    n = int(np.prod(list(mesh_shape)))
+    if len(coords) != n:
+        raise ValueError(f"allocation has {len(coords)} XPUs, mesh "
+                         f"needs {n}")
+    devs = devices if devices is not None else jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"only {len(devs)} devices for {n}-XPU mesh")
+    # torus coordinate -> device (index order stand-in / coords on TPU)
+    by_coord = {}
+    have_coords = all(hasattr(d, "coords") and d.coords is not None
+                      for d in devs[:1]) and getattr(
+                          devs[0], "platform", "") == "tpu"
+    if have_coords:
+        for d in devs:
+            by_coord[tuple(d.coords)[:3]] = d
+        chosen = [by_coord[c] for c in coords]
+    else:
+        chosen = [devs[i] for i in range(n)]
+    arr = np.array(chosen, dtype=object).reshape(tuple(mesh_shape))
+    return Mesh(arr, tuple(axes))
+
+
+def allocation_mesh_shape(num_xpus: int,
+                          prefer_model: int = 0) -> Tuple[int, int]:
+    """Factor an allocation size into a (data, model) mesh shape: the
+    model axis gets the largest power-of-two divisor <= prefer_model
+    (default: sqrt-ish split)."""
+    n = num_xpus
+    if prefer_model:
+        m = prefer_model
+        while n % m:
+            m -= 1
+        return (n // m, m)
+    m = 1
+    while (m * 2) * (m * 2) <= n or (n % (m * 2) == 0 and m * 2 * m * 2 <= n):
+        if n % (m * 2):
+            break
+        m *= 2
+        if m * m >= n:
+            break
+    m = max(1, m)
+    while n % m:
+        m //= 2
+    return (n // m, m)

@@ -1,0 +1,300 @@
+"""Attention variants: GQA (RoPE / M-RoPE / none, optional QKV bias,
+sliding window) and MLA (DeepSeek-V2 multi-head latent attention), with
+a unified circular-buffer KV cache for full and sliding-window decode.
+
+The einsum path here is the oracle/dry-run path; the Pallas flash
+kernel (repro.kernels.flash_attention) is an optional drop-in for the
+training forward (see ops.use_flash).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .common import (ModelConfig, Params, apply_mrope, apply_rope,
+                     dense_init)
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Params
+# ----------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, d_model: Optional[int] = None,
+                   n_heads: Optional[int] = None,
+                   n_kv_heads: Optional[int] = None,
+                   head_dim: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.n_heads
+    k = n_kv_heads or cfg.n_kv_heads
+    hd = head_dim or cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "w_q": dense_init(ks[0], (d, h * hd)),
+        "w_k": dense_init(ks[1], (d, k * hd)),
+        "w_v": dense_init(ks[2], (d, k * hd)),
+        "w_o": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * hd,), jnp.float32)
+        p["b_kv"] = jnp.zeros((k * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((k * hd,), jnp.float32)
+    return p
+
+
+def init_mla(cfg: ModelConfig, key) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], (d, cfg.q_lora_rank)),
+        "q_norm_scale": jnp.ones((cfg.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], (cfg.q_lora_rank, h * qk)),
+        "w_dkv": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim)),
+        "kv_norm_scale": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+        "w_ukv": dense_init(ks[3], (cfg.kv_lora_rank,
+                                    h * (cfg.qk_nope_dim + cfg.v_head_dim))),
+        "w_o": dense_init(ks[4], (h * cfg.v_head_dim, d)),
+    }
+
+
+# ----------------------------------------------------------------------
+# KV cache (circular buffer; window == buffer length)
+# ----------------------------------------------------------------------
+
+def init_kv_cache(batch: int, window: int, n_kv_heads: int, head_dim: int,
+                  dtype) -> Params:
+    return {
+        "k": jnp.zeros((batch, window, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, window, n_kv_heads, head_dim), dtype),
+        # absolute position held by each slot; -1 = empty
+        "slot_pos": jnp.full((batch, window), -1, jnp.int32),
+        "next_pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, window: int,
+                   dtype) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, window, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, window, cfg.qk_rope_dim), dtype),
+        "slot_pos": jnp.full((batch, window), -1, jnp.int32),
+        "next_pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cache_write(cache: Params, names: Tuple[str, ...], values,
+                 pos: jnp.ndarray) -> Params:
+    """Write one token (B, 1, ...) at slot ``pos % window``."""
+    window = cache["slot_pos"].shape[1]
+    slot = (pos % window).astype(jnp.int32)
+    new = dict(cache)
+    for name, val in zip(names, values):
+        arr = cache[name]
+        new[name] = jax.lax.dynamic_update_slice_in_dim(
+            arr, val.astype(arr.dtype), slot, axis=1)
+    b = cache["slot_pos"].shape[0]
+    new["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32),
+        slot, axis=1)
+    new["next_pos"] = (pos + 1).astype(jnp.int32)
+    return new
+
+
+# ----------------------------------------------------------------------
+# Core attention math
+# ----------------------------------------------------------------------
+
+def _gqa_scores_mask(q, k, q_pos, k_pos, window: int):
+    """q: (B,S,H,D) k: (B,T,K,D); returns weighted values via fp32
+    softmax with causal + sliding-window + validity masking."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    causal = k_pos[:, None, :] <= q_pos[:, :, None]           # (B,S,T)
+    valid = k_pos[:, None, :] >= 0
+    mask = causal & valid
+    if window:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs, g
+
+
+def _gqa_attend(q, k, v, q_pos, k_pos, window: int) -> jnp.ndarray:
+    probs, g = _gqa_scores_mask(q, k, q_pos, k_pos, window)
+    b, s, h, _ = q.shape
+    dv = v.shape[-1]  # may differ from the q/k dim (MLA)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ----------------------------------------------------------------------
+
+def attention_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                      positions: jnp.ndarray,
+                      cache: Optional[Params] = None,
+                      window: int = 0,
+                      n_heads: Optional[int] = None,
+                      n_kv_heads: Optional[int] = None,
+                      head_dim: Optional[int] = None,
+                      use_flash: bool = False
+                      ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """positions: (B, S) absolute token positions, or (B, S, 3) for
+    M-RoPE. cache=None -> full-sequence (train/prefill); cache given ->
+    single-token decode (S == 1)."""
+    h = n_heads or cfg.n_heads
+    kh = n_kv_heads or cfg.n_kv_heads
+    hd = head_dim or cfg.head_dim
+    b, s, _ = x.shape
+
+    q = x @ p["w_q"].astype(x.dtype)
+    k = x @ p["w_k"].astype(x.dtype)
+    v = x @ p["w_v"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(x.dtype)
+        k = k + p["b_kv"].astype(x.dtype)
+        v = v + p["b_v"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+
+    if cfg.pos_type == "rope":
+        pos1 = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos1, cfg.rope_theta)
+        k = apply_rope(k, pos1, cfg.rope_theta)
+    elif cfg.pos_type == "mrope":
+        pos3 = positions if positions.ndim == 3 else \
+            jnp.repeat(positions[..., None], 3, axis=-1)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+
+    pos1 = positions[..., 0] if positions.ndim == 3 else positions
+    if cache is None:
+        out = _flash_or_ref(cfg, q, k, v, pos1, pos1, window, use_flash)
+        new_cache = None
+    else:
+        assert s == 1, "decode expects one new token"
+        cur = pos1[:, 0]  # (B,)
+        new_cache = _cache_write(cache, ("k", "v"),
+                                 (k, v), cur[0].astype(jnp.int32))
+        kc, vc = new_cache["k"], new_cache["v"]
+        out = _gqa_attend(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                          pos1, new_cache["slot_pos"], window)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = out.reshape(b, s, h * hd) @ p["w_o"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def _flash_or_ref(cfg, q, k, v, q_pos, k_pos, window, use_flash):
+    if use_flash:
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(q, k, v, causal=True,
+                                         window=window or None)
+    return _gqa_attend(q, k, v, q_pos, k_pos, window)
+
+
+# ----------------------------------------------------------------------
+# MLA forward (DeepSeek-V2)
+# ----------------------------------------------------------------------
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def mla_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                positions: jnp.ndarray,
+                cache: Optional[Params] = None,
+                window: int = 0
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos1 = positions[..., 0] if positions.ndim == 3 else positions
+
+    # queries through the low-rank bottleneck
+    cq = _rms(x @ p["w_dq"].astype(x.dtype), p["q_norm_scale"])
+    q = (cq @ p["w_uq"].astype(x.dtype)).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos1, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+
+    # compressed kv + shared rotary key
+    dkv = x @ p["w_dkv"].astype(x.dtype)            # (B,S,lora+rope)
+    c_kv = _rms(dkv[..., :cfg.kv_lora_rank], p["kv_norm_scale"])
+    k_rope = apply_rope(dkv[..., None, cfg.kv_lora_rank:], pos1,
+                        cfg.rope_theta)             # (B,S,1,rope)
+
+    def expand_kv(c):
+        kv = (c @ p["w_ukv"].astype(x.dtype)).reshape(
+            c.shape[0], c.shape[1], h, nope + vd)
+        return kv[..., :nope], kv[..., nope:]
+
+    if cache is None:
+        k_nope, v = expand_kv(c_kv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (rope_d,))],
+            axis=-1)
+        out = _gqa_attend(q, k, v, pos1, pos1, window)
+        new_cache = None
+    elif not cfg.mla_absorb:
+        assert s == 1
+        cur = pos1[0, 0].astype(jnp.int32)
+        new_cache = _cache_write(cache, ("c_kv", "k_rope"),
+                                 (c_kv, k_rope[:, :, 0, :]), cur)
+        k_nope, v = expand_kv(new_cache["c_kv"].astype(x.dtype))
+        kr = new_cache["k_rope"].astype(x.dtype)[:, :, None, :]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr, k_nope.shape[:3] + (rope_d,))],
+            axis=-1)
+        out = _gqa_attend(q, k, v, pos1, new_cache["slot_pos"], window)
+    else:
+        # Absorbed decode: score/attend directly in the compressed
+        # c_kv space. q_nope.k_nope == (q_nope W_uk).c_kv, so results
+        # are bit-for-bit the same math at O(kv_lora) per cached token
+        # instead of re-expanding k/v over the whole cache each step.
+        assert s == 1
+        cur = pos1[0, 0].astype(jnp.int32)
+        new_cache = _cache_write(cache, ("c_kv", "k_rope"),
+                                 (c_kv, k_rope[:, :, 0, :]), cur)
+        r = cfg.kv_lora_rank
+        w_ukv = p["w_ukv"].astype(x.dtype).reshape(r, h, nope + vd)
+        w_uk, w_uv = w_ukv[..., :nope], w_ukv[..., nope:]
+        q_c = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)   # (B,1,H,r)
+        ckv_cache = new_cache["c_kv"].astype(x.dtype)      # (B,T,r)
+        kr_cache = new_cache["k_rope"].astype(x.dtype)     # (B,T,rope)
+        scores = (jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32),
+                             ckv_cache.astype(jnp.float32))
+                  + jnp.einsum("bshp,btp->bhst",
+                               q_rope.astype(jnp.float32),
+                               kr_cache.astype(jnp.float32)))
+        scores = scores / math.sqrt(nope + rope_d)
+        k_pos = new_cache["slot_pos"]
+        mask = (k_pos[:, None, :] <= pos1[:, :, None]) \
+            & (k_pos[:, None, :] >= 0)
+        if window:
+            mask &= (pos1[:, :, None] - k_pos[:, None, :]) < window
+        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)            # (B,H,1,T)
+        ctx = jnp.einsum("bhst,btr->bshr", probs,
+                         ckv_cache.astype(jnp.float32))    # (B,1,H,r)
+        out = jnp.einsum("bshr,rhv->bshv", ctx,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+
+    out = out.reshape(b, s, h * vd) @ p["w_o"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,116 @@
+"""Per-layer blocks for every architecture family, with a uniform
+(init_layer / apply_layer / init_layer_state) interface so model.py can
+scan over stacked layer params regardless of family.
+
+Kinds:
+  dense       — norm -> attention (GQA) -> norm -> gated FFN
+  moe         — norm -> attention (GQA or MLA) -> norm -> MoE FFN
+  mamba       — norm -> Mamba2 mixer
+  mlstm/slstm — xLSTM blocks
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_forward, init_attention, init_kv_cache,
+                        init_mla, init_mla_cache, mla_forward)
+from .common import ModelConfig, Params, apply_norm, init_norm
+from .ffn import ffn_forward, init_ffn, init_moe, moe_forward
+from .ssm import init_mamba2, init_mamba_state, mamba2_forward
+from .xlstm import (init_mlstm, init_mlstm_state, init_slstm,
+                    init_slstm_state, mlstm_forward, slstm_forward)
+
+ZERO = jnp.zeros((), jnp.float32)
+
+
+def init_layer(cfg: ModelConfig, key, kind: str) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("dense", "shared_attn"):
+        return {
+            "ln1": init_norm(cfg), "ln2": init_norm(cfg),
+            "attn": init_attention(cfg, k1),
+            "ffn": init_ffn(cfg, k2),
+        }
+    if kind == "moe":
+        attn = init_mla(cfg, k1) if cfg.use_mla else init_attention(cfg, k1)
+        return {
+            "ln1": init_norm(cfg), "ln2": init_norm(cfg),
+            "attn": attn, "moe": init_moe(cfg, k2),
+        }
+    if kind == "moe_dense":      # first-k-dense layers of DeepSeek-style
+        attn = init_mla(cfg, k1) if cfg.use_mla else init_attention(cfg, k1)
+        d_ff = cfg.d_ff if cfg.d_ff else cfg.moe_d_ff * (
+            cfg.n_shared_experts + cfg.moe_top_k)
+        return {
+            "ln1": init_norm(cfg), "ln2": init_norm(cfg),
+            "attn": attn, "ffn": init_ffn(cfg, k2, d_ff=d_ff),
+        }
+    if kind == "mamba":
+        return {"ln1": init_norm(cfg), "mixer": init_mamba2(cfg, k1)}
+    if kind == "mlstm":
+        return {"ln1": init_norm(cfg), "mixer": init_mlstm(cfg, k1)}
+    if kind == "slstm":
+        return {"ln1": init_norm(cfg), "mixer": init_slstm(cfg, k1)}
+    raise ValueError(kind)
+
+
+def init_layer_state(cfg: ModelConfig, kind: str, batch: int, window: int,
+                     dtype) -> Optional[Params]:
+    """Decode-time state for one layer (None for stateless kinds)."""
+    if kind in ("dense", "shared_attn"):
+        return init_kv_cache(batch, window, cfg.n_kv_heads, cfg.head_dim,
+                             dtype)
+    if kind in ("moe", "moe_dense"):
+        if cfg.use_mla:
+            return init_mla_cache(cfg, batch, window, dtype)
+        return init_kv_cache(batch, window, cfg.n_kv_heads, cfg.head_dim,
+                             dtype)
+    if kind == "mamba":
+        return init_mamba_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                positions: jnp.ndarray, kind: str,
+                state: Optional[Params] = None, window: int = 0,
+                use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Returns (x_out, new_state, aux_loss)."""
+    aux = ZERO
+    if kind in ("dense", "shared_attn", "moe", "moe_dense"):
+        h = apply_norm(cfg, p["ln1"], x)
+        if cfg.use_mla and kind in ("moe", "moe_dense"):
+            att, new_state = mla_forward(cfg, p["attn"], h, positions,
+                                         cache=state, window=window)
+        else:
+            att, new_state = attention_forward(cfg, p["attn"], h, positions,
+                                               cache=state, window=window,
+                                               use_flash=use_kernel)
+        x = x + att
+        h = apply_norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            ff, aux = moe_forward(cfg, p["moe"], h)
+        else:
+            ff = ffn_forward(cfg, p["ffn"], h)
+        return x + ff, new_state, aux
+    if kind == "mamba":
+        h = apply_norm(cfg, p["ln1"], x)
+        out, new_state = mamba2_forward(cfg, p["mixer"], h, state=state,
+                                        use_kernel=use_kernel)
+        return x + out, new_state, aux
+    if kind == "mlstm":
+        h = apply_norm(cfg, p["ln1"], x)
+        out, new_state = mlstm_forward(cfg, p["mixer"], h, state=state)
+        return x + out, new_state, aux
+    if kind == "slstm":
+        h = apply_norm(cfg, p["ln1"], x)
+        out, new_state = slstm_forward(cfg, p["mixer"], h, state=state)
+        return x + out, new_state, aux
+    raise ValueError(kind)

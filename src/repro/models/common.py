@@ -1,0 +1,251 @@
+"""Shared model substrate: config dataclass, initializers, norms,
+embeddings, rotary position encodings (incl. M-RoPE).
+
+Everything is pure-functional JAX: a module is an ``init_*`` returning a
+params pytree (nested dicts of jnp arrays) and an ``apply``-style
+function. No flax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+# ----------------------------------------------------------------------
+# Config
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all assigned architecture families; unused
+    fields are inert for a given ``arch_type``."""
+
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # norm / activation / embedding
+    norm_type: str = "rmsnorm"     # rmsnorm | layernorm | nonparametric_ln
+    act: str = "swiglu"            # swiglu | gelu
+    tie_embeddings: bool = False
+    pos_type: str = "rope"         # rope | mrope | sinusoidal | none
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)   # qwen2-vl (t, h, w)
+    qkv_bias: bool = False
+    sliding_window: int = 0        # 0 = full attention
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 1
+    moe_d_ff: int = 0
+    first_k_dense: int = 0
+    # per-batch-row (hierarchical) dispatch keeps routing local to the
+    # data shard — removes the global-sort all-gather (see ffn.py)
+    moe_local_dispatch: bool = False
+    capacity_factor: float = 1.25
+    router_type: str = "softmax"   # softmax | sigmoid
+
+    # MLA (DeepSeek-V2)
+    use_mla: bool = False
+    # absorbed-MLA decode (DeepSeek-V2 weight absorption): attend in the
+    # compressed kv space instead of expanding k/v over the whole cache
+    # every step — mathematically identical, O(r) per cached token.
+    mla_absorb: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # SSM (Mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    n_ssm_groups: int = 1
+
+    # hybrid (Zamba2): shared attention block applied every k SSM layers
+    shared_attn_every: int = 0
+
+    # xLSTM
+    use_xlstm: bool = False
+    slstm_every: int = 8           # 7:1 mLSTM:sLSTM ratio
+    xlstm_proj_factor: float = 2.0
+    xlstm_qk_dim: int = 256        # per-head q/k width (mLSTM)
+
+    # audio (MusicGen): EnCodec codebooks
+    n_codebooks: int = 0
+
+    # vlm (Qwen2-VL): stub vision frontend supplies patch embeddings
+    vision_stub: bool = False
+
+    # numerics / training
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "none"            # none | full
+    # long-context decode mode: 'window' uses sliding-window KV cache,
+    # 'recurrent' means O(1) state (ssm/xlstm), 'full' keeps everything
+    long_context_mode: str = "window"
+
+    # dry-run probe: disable scan-over-layers (XLA cost analysis counts
+    # a scan body once; unrolled reduced-depth probes recover true
+    # per-layer costs — see launch/dryrun.py)
+    force_unscanned: bool = False
+
+    # provenance
+    source: str = ""
+
+    def __post_init__(self) -> None:
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.n_heads, 1))
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_recurrent(self) -> bool:
+        return self.arch_type == "ssm" or self.use_xlstm
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# Initializers
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape: Sequence[int], in_axis: int = -2,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, tuple(shape),
+                                        dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, tuple(shape), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparametric_ln":   # OLMo
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_type == "layernorm":
+            out = out * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary embeddings
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                      # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions3: (B, S, 3) — (temporal, height, width)
+    indices. The D/2 frequency slots are partitioned into ``sections``
+    (t, h, w); each section rotates by its own position stream.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # Build per-slot position: (B, S, half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        pos = positions3[..., i].astype(jnp.float32)   # (B, S)
+        parts.append(jnp.broadcast_to(pos[..., None],
+                                      pos.shape + (sec,)))
+        start += sec
+    slot_pos = jnp.concatenate(parts, axis=-1)         # (B, S, half)
+    angles = slot_pos * freqs                          # (B, S, half)
+    angles = angles[..., None, :]                      # (B, S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int,
+                         offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """MusicGen-style sinusoidal embeddings, (S, D)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# Activations
+# ----------------------------------------------------------------------
+
+def gated_act(cfg: ModelConfig, gate: jnp.ndarray,
+              up: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if cfg.act == "gelu":
+        return jax.nn.gelu(gate) * up
+    raise ValueError(cfg.act)

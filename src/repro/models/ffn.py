@@ -1,0 +1,232 @@
+"""Feed-forward layers: gated dense FFN (SwiGLU/GELU) and MoE with
+sort-based top-k token-choice dispatch (GShard-style capacity, no giant
+one-hot dispatch tensors — static-shape gathers that lower cleanly under
+GSPMD with experts sharded on the 'model'/expert axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .common import ModelConfig, Params, dense_init, gated_act
+
+
+# ----------------------------------------------------------------------
+# Dense gated FFN
+# ----------------------------------------------------------------------
+
+def init_ffn(cfg: ModelConfig, key, d_ff: Optional[int] = None,
+             d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f)),
+        "w_up": dense_init(ks[1], (d, f)),
+        "w_down": dense_init(ks[2], (f, d)),
+    }
+
+
+def ffn_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = x @ p["w_gate"].astype(x.dtype)
+    up = x @ p["w_up"].astype(x.dtype)
+    h = gated_act(cfg, gate, up)
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Mixture of Experts
+# ----------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {
+        "router": dense_init(ks[0], (d, e)),
+        "w_gate": dense_init(ks[1], (e, d, f)),
+        "w_up": dense_init(ks[2], (e, d, f)),
+        "w_down": dense_init(ks[3], (e, f, d)),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], (d, fs)),
+            "w_up": dense_init(ks2[1], (d, fs)),
+            "w_down": dense_init(ks2[2], (fs, d)),
+        }
+    return p
+
+
+def router_probs(cfg: ModelConfig, logits: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routing. Returns (weights (N,k), expert_ids (N,k))."""
+    if cfg.router_type == "softmax":
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+        w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+    elif cfg.router_type == "sigmoid":     # llama4-style top-1 sigmoid
+        score, idx = jax.lax.top_k(logits.astype(jnp.float32), cfg.moe_top_k)
+        w = jax.nn.sigmoid(score)
+    else:
+        raise ValueError(cfg.router_type)
+    return w, idx
+
+
+def aux_load_balance_loss(cfg: ModelConfig, logits: jnp.ndarray,
+                          idx: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style load-balance loss (mean fraction * mean prob * E)."""
+    e = cfg.n_experts
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    counts = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac = counts / jnp.clip(counts.sum(), 1.0)
+    return e * jnp.sum(me * frac)
+
+
+def moe_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.moe_local_dispatch:
+        return moe_forward_local(cfg, p, x)
+    return moe_forward_global(cfg, p, x)
+
+
+def moe_forward_local(cfg: ModelConfig, p: Params, x: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Hierarchical (per-batch-row) dispatch: route/sort/capacity WITHIN
+    each sequence, so every dispatch array keeps the leading batch dim —
+    which stays sharded on the data axis. The global-argsort path below
+    gathers all tokens to sort them (SPMD cannot shard a global sort),
+    turning MoE layers collective-bound; this variant removes that at
+    the cost of per-row (instead of global) capacity smoothing.
+    """
+    b, s, d = x.shape
+    k, e = cfg.moe_top_k, cfg.n_experts
+    cap = int(cfg.capacity_factor * s * k / e) + 1
+
+    logits = x @ p["router"].astype(x.dtype)               # (B,S,E)
+    w, idx = router_probs(cfg, logits)                     # (B,S,k)
+    aux = aux_load_balance_loss(cfg, logits, idx)
+
+    # GATHER-ONLY dispatch: scatter-adds partition poorly under GSPMD
+    # (the scattered operand gets replicated and all-reduced), so both
+    # the dispatch and the combine are expressed as sorts + gathers +
+    # an inverse-permutation gather, all of which keep the batch dim
+    # sharded locally.
+    flat_e = idx.reshape(b, s * k)
+    flat_w = w.reshape(b, s * k)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(s), k)[None],
+                                (b, s * k))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, -1)
+    sw = jnp.take_along_axis(flat_w, order, -1)
+    stok = jnp.take_along_axis(flat_tok, order, -1)
+    seg_pos = jnp.broadcast_to(jnp.arange(s * k)[None], (b, s * k))
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="left"))(se)
+    seg_end = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="right"))(se)
+    counts = seg_end - seg_start                           # (B, E)
+    pos_in_e = seg_pos - jnp.take_along_axis(seg_start, se, -1)
+    keep = pos_in_e < cap                                  # (B, S*k)
+
+    # dispatch: slot (e, c) reads sorted pair seg_start[e] + c
+    x_sorted = jnp.take_along_axis(x, stok[..., None], axis=1)  # gather
+    src = seg_start[:, :, None] + jnp.arange(cap)[None, None, :]
+    valid = jnp.arange(cap)[None, None, :] < counts[:, :, None]
+    src_c = jnp.clip(src, 0, s * k - 1).reshape(b, e * cap)
+    buf = jnp.take_along_axis(x_sorted, src_c[..., None], axis=1)
+    buf = buf.reshape(b, e, cap, d) * valid[..., None].astype(x.dtype)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    h = gated_act(cfg, gate, up)
+    h = constrain(h, "batch", "expert", None, None)
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    out_e = out_e.reshape(b, e * cap, d)
+
+    # combine: pair -> slot gather, weight, unsort (inverse perm), then
+    # a static reshape-sum over each token's k routed pairs
+    slot = se * cap + jnp.clip(pos_in_e, 0, cap - 1)       # (B, S*k)
+    contrib = jnp.take_along_axis(out_e, slot[..., None], axis=1) \
+        * (sw * keep).astype(x.dtype)[..., None]           # sorted order
+    inv = jnp.argsort(order, axis=-1)                      # inverse perm
+    contrib = jnp.take_along_axis(contrib, inv[..., None], axis=1)
+    out = contrib.reshape(b, s, k, d).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        g2 = x @ sp["w_gate"].astype(x.dtype)
+        u2 = x @ sp["w_up"].astype(x.dtype)
+        out = out + gated_act(cfg, g2, u2) @ sp["w_down"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), aux
+
+
+def moe_forward_global(cfg: ModelConfig, p: Params, x: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Sort-based dispatch: flatten tokens, route, stable-sort by expert id,
+    pad each expert segment to a static capacity C, batch the expert
+    FFNs with an (E, C, D) einsum (expert dim shardable), and scatter
+    back weighted by router probs. Overflow tokens beyond capacity fall
+    through via the residual (standard token dropping).
+    """
+    b, s, d = x.shape
+    n = b * s
+    k = cfg.moe_top_k
+    e = cfg.n_experts
+    cap = int(cfg.capacity_factor * n * k / e) + 1
+
+    xt = x.reshape(n, d)
+    logits = xt @ p["router"].astype(x.dtype)              # (N, E)
+    w, idx = router_probs(cfg, logits)                     # (N,k)
+    aux = aux_load_balance_loss(cfg, logits, idx)
+
+    flat_e = idx.reshape(-1)                               # (N*k,)
+    flat_w = w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+
+    order = jnp.argsort(flat_e, stable=True)               # sort by expert
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    # position of each routed pair within its expert segment
+    ones = jnp.ones_like(se)
+    seg_pos = jnp.cumsum(ones) - 1
+    seg_start_per_e = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos_in_e = seg_pos - seg_start_per_e[se]
+    keep = pos_in_e < cap
+    slot = se * cap + jnp.where(keep, pos_in_e, cap - 1)   # (N*k,)
+
+    # Gather tokens into (E*C, D); dropped slots get zeros via mask.
+    gathered = xt[stok] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], gathered, 0))
+    buf = buf.reshape(e, cap, d)
+    buf = constrain(buf, "expert", None, "embed")
+
+    # Expert FFNs, batched over the (sharded) expert dim.
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = gated_act(cfg, gate, up)
+    # expert dim already consumes the model axis; ff stays unsharded
+    h = constrain(h, "expert", None, None)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_e = out_e.reshape(e * cap, d)
+
+    # Combine: weighted scatter back to tokens.
+    contrib = out_e[slot] * (sw * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((n, d), x.dtype).at[stok].add(contrib)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        gate = xt @ sp["w_gate"].astype(x.dtype)
+        up = xt @ sp["w_up"].astype(x.dtype)
+        out = out + gated_act(cfg, gate, up) @ sp["w_down"].astype(x.dtype)
+
+    out = out.reshape(b, s, d)
+    return constrain(out, "batch", "seq", "embed"), aux

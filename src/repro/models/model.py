@@ -1,0 +1,322 @@
+"""Full language-model assembly: embeddings -> scanned layer stack ->
+final norm -> LM head(s); plus decode-state plumbing.
+
+Layer stacks are ``jax.lax.scan``-over-stacked-params so that 512-way
+SPMD dry-runs compile in seconds instead of hours. Heterogeneous
+patterns are expressed as scans over *groups*:
+
+  dense/audio/vlm : scan(n_layers x dense)
+  moe             : first_k_dense unscanned + scan(rest x moe)
+  ssm (xlstm)     : scan(G x [slstm ; (k-1) x mlstm]), k = slstm_every
+  hybrid (zamba2) : scan(G x [shared_attn? ; k x mamba]) + leftover;
+                    the attention block params are SHARED (closed over),
+                    applied once at the start of each group.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .blocks import apply_layer, init_layer, init_layer_state
+from .common import (ModelConfig, Params, apply_norm, embed_init, init_norm,
+                     sinusoidal_positions)
+
+
+# ----------------------------------------------------------------------
+# Layer plan
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Segment:
+    kind: str          # block kind for blocks.py
+    count: int         # layers in this segment
+    scanned: bool      # stacked params + lax.scan
+    group: Tuple[str, ...] = ()   # for grouped scans: kinds within group
+
+
+def layer_plan(cfg: ModelConfig) -> List[Segment]:
+    return _finalize_plan(cfg, _layer_plan(cfg))
+
+
+def _layer_plan(cfg: ModelConfig) -> List[Segment]:
+    at = cfg.arch_type
+    if at in ("dense", "audio", "vlm"):
+        return [Segment("dense", cfg.n_layers, True)]
+    if at == "moe":
+        segs: List[Segment] = []
+        if cfg.first_k_dense:
+            segs.append(Segment("moe_dense", cfg.first_k_dense, False))
+        segs.append(Segment("moe", cfg.n_layers - cfg.first_k_dense, True))
+        return segs
+    if at == "ssm":    # xLSTM
+        k = cfg.slstm_every
+        assert cfg.n_layers % k == 0, "n_layers must divide slstm_every"
+        group = ("slstm",) + ("mlstm",) * (k - 1)
+        return [Segment("xlstm_group", cfg.n_layers // k, True, group)]
+    if at == "hybrid":  # zamba2
+        k = cfg.shared_attn_every
+        g, rem = divmod(cfg.n_layers, k)
+        segs = [Segment("hybrid_group", g, True, ("mamba",) * k)]
+        if rem:
+            segs.append(Segment("mamba", rem, False))
+        return segs
+    raise ValueError(at)
+
+
+def _finalize_plan(cfg: ModelConfig, segs: List[Segment]) -> List[Segment]:
+    if cfg.force_unscanned:
+        segs = [Segment(s.kind, s.count, False, s.group) for s in segs]
+    return segs
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def _stacked_init(fn, key, count: int):
+    return jax.vmap(fn)(jax.random.split(key, count))
+
+
+def init_model(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    d = cfg.d_model
+
+    if cfg.arch_type == "audio":
+        params["embed"] = jnp.stack([
+            embed_init(k, (cfg.vocab_size, d))
+            for k in jax.random.split(keys[0], cfg.n_codebooks)])
+        params["lm_head"] = jnp.stack([
+            embed_init(k, (d, cfg.vocab_size))
+            for k in jax.random.split(keys[1], cfg.n_codebooks)])
+    else:
+        params["embed"] = embed_init(keys[0], (cfg.vocab_size, d))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(keys[1], (d, cfg.vocab_size))
+
+    segs = layer_plan(cfg)
+    seg_params = []
+    seg_keys = jax.random.split(keys[2], len(segs))
+    for seg, sk in zip(segs, seg_keys):
+        if seg.kind in ("xlstm_group", "hybrid_group"):
+            def ginit(k, seg=seg):
+                gk = jax.random.split(k, len(seg.group))
+                return {f"{i}_{kind}": init_layer(cfg, gk[i], kind)
+                        for i, kind in enumerate(seg.group)}
+            if seg.scanned:
+                seg_params.append(_stacked_init(ginit, sk, seg.count))
+            else:
+                gks = jax.random.split(sk, seg.count)
+                seg_params.append([ginit(gks[i]) for i in range(seg.count)])
+        elif seg.scanned:
+            seg_params.append(_stacked_init(
+                lambda k, seg=seg: init_layer(cfg, k, seg.kind),
+                sk, seg.count))
+        else:
+            lk = jax.random.split(sk, seg.count)
+            seg_params.append([init_layer(cfg, lk[i], seg.kind)
+                               for i in range(seg.count)])
+    params["segments"] = seg_params
+    if cfg.arch_type == "hybrid":
+        params["shared_attn"] = init_layer(cfg, keys[3], "shared_attn")
+    params["final_norm"] = init_norm(cfg)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Embedding / head
+# ----------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: Params, batch: Dict) -> jnp.ndarray:
+    if "embeds" in batch and batch["embeds"] is not None:
+        x = batch["embeds"]            # stub modality frontend (audio/vlm)
+    elif cfg.arch_type == "audio":
+        toks = batch["tokens"]         # (B, K, S)
+        emb = params["embed"]          # (K, V, D)
+        x = jnp.zeros(toks.shape[:1] + toks.shape[2:] + (cfg.d_model,),
+                      cfg.activation_dtype)
+        for k in range(cfg.n_codebooks):
+            x = x + emb[k][toks[:, k]].astype(cfg.activation_dtype)
+    else:
+        x = params["embed"][batch["tokens"]].astype(cfg.activation_dtype)
+        if cfg.arch_type == "vlm" and batch.get("patch_embeds") is not None:
+            # stub ViT frontend: splice projected patch embeddings over
+            # the image-placeholder positions (mask: (B, S) bool)
+            pe = batch["patch_embeds"].astype(cfg.activation_dtype)
+            mask = batch["patch_mask"][..., None]
+            x = jnp.where(mask, pe, x)
+    if cfg.pos_type == "sinusoidal":
+        pos0 = batch.get("pos_offset", 0)
+        sin = sinusoidal_positions(x.shape[1], cfg.d_model, pos0)
+        x = x + sin[None].astype(x.dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def lm_logits(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.arch_type == "audio":
+        logits = jnp.einsum("bsd,kdv->bskv", x,
+                            params["lm_head"].astype(x.dtype))
+        return constrain(logits, "batch", "seq", None, "vocab")
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    return constrain(x @ head, "batch", "seq", "vocab")
+
+
+# ----------------------------------------------------------------------
+# Forward (train / prefill) and decode
+# ----------------------------------------------------------------------
+
+def _positions_from(cfg: ModelConfig, batch: Dict, seq: int,
+                    bsz: int) -> jnp.ndarray:
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None],
+                               (bsz, seq))
+    return pos
+
+
+def _apply_group(cfg, group_kinds, gp, x, positions, states, window,
+                 use_kernel, shared_attn=None):
+    """One group of a grouped scan; states is a dict or None."""
+    aux = jnp.zeros((), jnp.float32)
+    new_states = {} if states is not None else None
+    if shared_attn is not None:
+        st = states.get("shared") if states is not None else None
+        x, ns, a = apply_layer(cfg, shared_attn, x, positions,
+                               "shared_attn", state=st, window=window,
+                               use_kernel=use_kernel)
+        aux += a
+        if new_states is not None:
+            new_states["shared"] = ns
+    for i, kind in enumerate(group_kinds):
+        name = f"{i}_{kind}"
+        st = states.get(name) if states is not None else None
+        x, ns, a = apply_layer(cfg, gp[name], x, positions, kind,
+                               state=st, window=window,
+                               use_kernel=use_kernel)
+        aux += a
+        if new_states is not None:
+            new_states[name] = ns
+    return x, new_states, aux
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+               positions: jnp.ndarray, states: Optional[List] = None,
+               window: int = 0, use_kernel: bool = False):
+    """states: list matching segments (stacked pytrees for scanned
+    segments); None for train/prefill-without-cache."""
+    segs = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states: Optional[List] = [] if states is not None else None
+    shared = params.get("shared_attn")
+
+    for si, (seg, sp) in enumerate(zip(segs, params["segments"])):
+        st_seg = states[si] if states is not None else None
+        grouped = seg.kind in ("xlstm_group", "hybrid_group")
+        shared_for_seg = shared if seg.kind == "hybrid_group" else None
+        if not seg.scanned:
+            seg_new = []
+            for li in range(seg.count):
+                st = st_seg[li] if st_seg is not None else None
+                if grouped:
+                    fn = lambda lp, h, st_: _apply_group(
+                        cfg, seg.group, lp, h, positions, st_, window,
+                        use_kernel, shared_attn=shared_for_seg)
+                else:
+                    fn = lambda lp, h, st_: apply_layer(
+                        cfg, lp, h, positions, seg.kind, state=st_,
+                        window=window, use_kernel=use_kernel)
+                if cfg.remat == "full":
+                    fn = jax.checkpoint(fn, prevent_cse=False)
+                x, ns, a = fn(sp[li], x, st)
+                aux_total += a
+                seg_new.append(ns)
+            if new_states is not None:
+                new_states.append(seg_new)
+            continue
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, lst = xs
+            if grouped:
+                h, ns, a = _apply_group(cfg, seg.group, lp, h, positions,
+                                        lst, window, use_kernel,
+                                        shared_attn=shared_for_seg)
+            else:
+                h, ns, a = apply_layer(cfg, lp, h, positions, seg.kind,
+                                       state=lst, window=window,
+                                       use_kernel=use_kernel)
+            return (h, aux + a), ns
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), seg_new = jax.lax.scan(
+            body, (x, aux_total), (sp, st_seg))
+        if new_states is not None:
+            new_states.append(seg_new)
+
+    return x, new_states, aux_total
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict,
+            use_kernel: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    x = embed_tokens(cfg, params, batch)
+    b, s = x.shape[:2]
+    positions = _positions_from(cfg, batch, s, b)
+    window = cfg.sliding_window
+    x, _, aux = _run_stack(cfg, params, x, positions, None, window,
+                           use_kernel)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params, x), aux
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, window: int,
+                      dtype) -> List:
+    """Per-segment decode state, stacked for scanned segments."""
+    def one(kind):
+        return init_layer_state(cfg, kind, batch, window, dtype)
+
+    def stack(tree, count):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (count,) + l.shape).copy(), tree)
+
+    states: List[Any] = []
+    for seg in layer_plan(cfg):
+        if seg.kind in ("xlstm_group", "hybrid_group"):
+            def gstate():
+                g: Dict[str, Any] = {}
+                if seg.kind == "hybrid_group":
+                    g["shared"] = one("shared_attn")
+                for i, kind in enumerate(seg.group):
+                    g[f"{i}_{kind}"] = one(kind)
+                return g
+            if seg.scanned:
+                states.append(stack(gstate(), seg.count))
+            else:
+                states.append([gstate() for _ in range(seg.count)])
+        elif seg.scanned:
+            states.append(stack(one(seg.kind), seg.count))
+        else:
+            states.append([one(seg.kind) for _ in range(seg.count)])
+    return states
+
+
+def decode_step(cfg: ModelConfig, params: Params, state: List,
+                batch: Dict) -> Tuple[jnp.ndarray, List]:
+    """One-token decode. batch['tokens']: (B, 1) (or (B,K,1) audio);
+    batch['positions']: (B, 1) absolute positions. Returns (logits,
+    new_state)."""
+    x = embed_tokens(cfg, params, batch)
+    b = x.shape[0]
+    positions = batch["positions"]
+    window = (cfg.sliding_window
+              if cfg.long_context_mode == "window" else 0)
+    x, new_state, _ = _run_stack(cfg, params, x, positions, state, window)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params, x), new_state

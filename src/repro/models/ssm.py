@@ -1,0 +1,138 @@
+"""Mamba2 mixer layer (chunked SSD) with O(1) recurrent decode state.
+
+Used by the xlstm/zamba2-family configs ('ssm' and 'hybrid' arch types).
+The heavy intra-chunk math goes through repro.kernels.ssd_scan (ops
+selects the Pallas kernel or the jnp oracle).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ref as ssd
+from repro.parallel.sharding import constrain
+from .common import ModelConfig, Params, dense_init
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state, cfg.n_ssm_groups
+
+
+def init_mamba2(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    di, h, n, g = mamba_dims(cfg)
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + h)),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch))
+                   * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d)),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray,
+                           b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C); w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # k is tiny (4): unrolled taps, no conv op needed
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gated_rmsnorm(x: jnp.ndarray, gate: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    xf = (x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+          ).astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, h, n, g = mamba_dims(cfg)
+    z, xc, bc, cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xc, bc, cc, dt
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    di, h, n, g = mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * g * n), dtype),
+    }
+
+
+def mamba2_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                   state: Optional[Params] = None,
+                   use_kernel: bool = False
+                   ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D). state=None -> full sequence; else single-token."""
+    b, s, _ = x.shape
+    di, h, n, g = mamba_dims(cfg)
+    hp = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xc, bc, cc, dt_pre = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+
+    if state is None:
+        conv_out = _causal_depthwise_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_state = None
+    else:
+        assert s == 1
+        hist = jnp.concatenate([state["conv"], conv_in], axis=1)
+        out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                         p["conv_w"].astype(jnp.float32)) \
+            + p["conv_b"].astype(jnp.float32)
+        conv_out = out[:, None, :].astype(x.dtype)
+        new_conv = hist[:, 1:, :]
+        new_state = {"conv": new_conv}
+
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, bs, cs = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, hp)
+    xs = constrain(xs, "batch", "seq", "heads", None)
+    # group-broadcast B, C to heads
+    bs = jnp.repeat(bs.reshape(b, s, g, n), h // g, axis=2)
+    cs = jnp.repeat(cs.reshape(b, s, g, n), h // g, axis=2)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if state is None:
+        if use_kernel:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, _ = ssd_ops.ssd_scan(xs, dt, a, bs, cs, chunk=cfg.ssm_chunk,
+                                    d_skip=p["d_skip"])
+        else:
+            chunk = min(cfg.ssm_chunk, s) if s % min(cfg.ssm_chunk, s) == 0 \
+                else 1
+            # pick the largest chunk that divides S
+            chunk = max(c for c in (cfg.ssm_chunk, 64, 32, 16, 8, 4, 2, 1)
+                        if s % c == 0 and c <= s)
+            y, _ = ssd.ssd_reference(xs, dt, a, bs, cs, chunk=chunk,
+                                     d_skip=p["d_skip"])
+    else:
+        y, new_ssm = ssd.ssd_step(state["ssm"], xs[:, 0], dt[:, 0],
+                                  a, bs[:, 0], cs[:, 0], p["d_skip"])
+        y = y[:, None]
+        new_state["ssm"] = new_ssm
+
+    y = y.reshape(b, s, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), new_state

@@ -1,0 +1,229 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel quadratic training form,
+O(1) recurrent decode) and sLSTM (scalar memory with exponential gating,
+recurrent scan). Layer pattern follows the paper's 7:1 mLSTM:sLSTM mix.
+
+References: Beck et al., "xLSTM: Extended Long Short-Term Memory"
+(arXiv:2405.04517), stabilized exponential gating (eqs. 15-27).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .common import ModelConfig, Params, dense_init
+
+NEG_INF = -1e30
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    d_v = d_inner // h
+    d_qk = cfg.xlstm_qk_dim
+    return d_inner, h, d_qk, d_v
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+
+def init_mlstm(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    di, h, dqk, dv = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di)),       # [mixer | gate]
+        "w_q": dense_init(ks[1], (di, h * dqk)),
+        "w_k": dense_init(ks[2], (di, h * dqk)),
+        "w_v": dense_init(ks[3], (di, h * dv)),
+        "w_ig": dense_init(ks[4], (di, h)),
+        "w_fg": dense_init(ks[5], (di, h)),
+        "b_ig": jnp.zeros((h,), jnp.float32),
+        "b_fg": jnp.full((h,), 3.0, jnp.float32),     # open forget gates
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[6], (di, d)),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    _, h, dqk, dv = mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dqk, dv), jnp.float32),
+        "n": jnp.zeros((batch, h, dqk), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Stabilized parallel form. q,k: (B,S,H,Dqk); v: (B,S,H,Dv);
+    i_pre,f_pre: (B,S,H) gate pre-activations."""
+    b, s, h, dqk = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))      # (B,S,H)
+    logf_cum = jnp.cumsum(logf, axis=1)
+    # D[t, s] = logf_cum[t] - logf_cum[s] + i[s]   (s <= t)
+    dmat = (logf_cum[:, :, None, :] - logf_cum[:, None, :, :]
+            + i_pre.astype(jnp.float32)[:, None, :, :])       # (B,T,S,H)
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, NEG_INF)
+    m = jnp.max(dmat, axis=2)                                 # (B,T,H)
+    dprime = jnp.exp(dmat - m[:, :, None, :])
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dqk)
+    w = scores * dprime
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2)), jnp.exp(-m))   # (B,T,H)
+    y = jnp.einsum("btsh,bshv->bthv", w, v.astype(jnp.float32))
+    y = y / (norm[..., None] + 1e-6)
+    return y.astype(q.dtype)
+
+
+def _mlstm_step(state, q, k, v, i_pre, f_pre):
+    """q,k: (B,H,Dqk); v: (B,H,Dv); gates (B,H). Returns (y, state)."""
+    f32 = jnp.float32
+    logf = jax.nn.log_sigmoid(f_pre.astype(f32))
+    m_new = jnp.maximum(logf + state["m"], i_pre.astype(f32))
+    fg = jnp.exp(logf + state["m"] - m_new)
+    ig = jnp.exp(i_pre.astype(f32) - m_new)
+    kq_scale = 1.0 / math.sqrt(q.shape[-1])
+    c_new = state["c"] * fg[..., None, None] + \
+        ig[..., None, None] * (k.astype(f32)[..., :, None]
+                               * v.astype(f32)[..., None, :])
+    n_new = state["n"] * fg[..., None] + ig[..., None] * k.astype(f32)
+    qf = q.astype(f32) * kq_scale
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / (den[..., None] + 1e-6)).astype(q.dtype)
+    return y, {"c": c_new, "n": n_new, "m": m_new}
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def mlstm_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  state: Optional[Params] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, _ = x.shape
+    di, h, dqk, dv = mlstm_dims(cfg)
+    up = x @ p["w_in"].astype(x.dtype)
+    xm, gate = jnp.split(up, 2, axis=-1)
+    q = (xm @ p["w_q"].astype(x.dtype)).reshape(b, s, h, dqk)
+    k = (xm @ p["w_k"].astype(x.dtype)).reshape(b, s, h, dqk)
+    v = (xm @ p["w_v"].astype(x.dtype)).reshape(b, s, h, dv)
+    q = constrain(q, "batch", "seq", "heads", None)
+    i_pre = xm @ p["w_ig"].astype(x.dtype) + p["b_ig"].astype(x.dtype)
+    f_pre = xm @ p["w_fg"].astype(x.dtype) + p["b_fg"].astype(x.dtype)
+
+    if state is None:
+        y = _mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_state = None
+    else:
+        assert s == 1
+        y, new_state = _mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                   i_pre[:, 0], f_pre[:, 0])
+        y = y[:, None]
+    y = y.reshape(b, s, di)
+    y = _rms(y, p["norm_scale"]) * jax.nn.silu(
+        gate.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["w_out"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), new_state
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+
+def slstm_head_dim(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.n_heads
+
+
+def init_slstm(cfg: ModelConfig, key) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = slstm_head_dim(cfg)
+    ks = jax.random.split(key, 9)
+    p = {"w_in": dense_init(ks[0], (d, 4 * d))}       # z, i, f, o pre-acts
+    for name, kk in zip(("r_z", "r_i", "r_f", "r_o"), ks[1:5]):
+        p[name] = (jax.random.normal(kk, (h, dh, dh)) / math.sqrt(dh)
+                   ).astype(jnp.float32)
+    p["b_z"] = jnp.zeros((d,), jnp.float32)
+    p["b_i"] = jnp.zeros((d,), jnp.float32)
+    p["b_f"] = jnp.full((d,), 3.0, jnp.float32)
+    p["b_o"] = jnp.zeros((d,), jnp.float32)
+    p["norm_scale"] = jnp.ones((d,), jnp.float32)
+    p["w_out"] = dense_init(ks[5], (d, d))
+    return p
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+    }
+
+
+def _slstm_cell(cfg: ModelConfig, p: Params, state, zifo):
+    """One timestep. zifo: (B, 4D) pre-activations from the input path."""
+    f32 = jnp.float32
+    b = zifo.shape[0]
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    hprev = state["h"].reshape(b, h, dh)
+
+    def rec(r):
+        return jnp.einsum("bhd,hde->bhe", hprev, r).reshape(b, d)
+
+    z_pre, i_pre, f_pre, o_pre = jnp.split(zifo.astype(f32), 4, axis=-1)
+    z_pre = z_pre + rec(p["r_z"]) + p["b_z"]
+    i_pre = i_pre + rec(p["r_i"]) + p["b_i"]
+    f_pre = f_pre + rec(p["r_f"]) + p["b_f"]
+    o_pre = o_pre + rec(p["r_o"]) + p["b_o"]
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    ig = jnp.exp(i_pre - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = fg * state["c"] + ig * z
+    n_new = fg * state["n"] + ig
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  state: Optional[Params] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    zifo = x @ p["w_in"].astype(x.dtype)
+
+    if state is None:
+        st = init_slstm_state(cfg, b)
+
+        def step(carry, zifo_t):
+            new = _slstm_cell(cfg, p, carry, zifo_t)
+            return new, new["h"]
+
+        _, hs = jax.lax.scan(step, st, jnp.moveaxis(zifo, 1, 0))
+        y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)     # (B,S,D)
+        new_state = None
+    else:
+        assert s == 1
+        new_state = _slstm_cell(cfg, p, state, zifo[:, 0])
+        y = new_state["h"][:, None].astype(x.dtype)
+
+    y = _rms(y, p["norm_scale"])
+    out = y @ p["w_out"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), new_state
+
+
+def is_slstm_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    return cfg.slstm_every > 0 and layer_idx % cfg.slstm_every == 0

@@ -1,0 +1,266 @@
+"""Logical-axis sharding rules (MaxText-style) for params & activations.
+
+Models annotate activations with *logical* names via ``constrain``;
+a context-installed rule table maps logical names to mesh axes. With no
+rules installed (CPU smoke tests) everything is a no-op.
+
+Mesh axes:
+  pod    — slow inter-pod DCN/ICI axis (pure data parallel)
+  data   — intra-pod data parallel; doubles as the FSDP axis for params
+  model  — tensor/expert parallel axis
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# logical name -> mesh axis (or tuple of axes); None = replicate
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": None,         # flipped to 'data' for long-context decode
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "fsdp": "data",
+    "expert_fsdp": "data",   # FSDP axis of expert weights (separable)
+    "tp": "model",
+    "state": None,
+}
+
+
+def rules_for(mesh: Optional[Mesh], *, shard_cache_seq: bool = False,
+              fsdp: bool = True) -> Dict[str, Any]:
+    """Rule table adapted to the mesh actually in use."""
+    rules = dict(DEFAULT_RULES)
+    axes = set(mesh.axis_names) if mesh is not None else set()
+    if "pod" not in axes:
+        rules["batch"] = "data" if "data" in axes else None
+    if "model" not in axes:
+        for k in ("heads", "kv_heads", "ff", "vocab", "expert", "tp"):
+            rules[k] = None
+    if "data" not in axes or not fsdp:
+        rules["fsdp"] = None
+        rules["expert_fsdp"] = None
+    if shard_cache_seq and "data" in axes:
+        rules["cache_seq"] = "data"
+    return rules
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Optional[Dict[str, Any]]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_STATE, "rules", None)
+
+
+def spec_for(names: Sequence[Optional[str]],
+             rules: Optional[Dict[str, Any]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    parts = []
+    for n in names:
+        parts.append(None if n is None else rules.get(n))
+    return P(*parts)
+
+
+def constrain(x: jnp.ndarray, *names: Optional[str]) -> jnp.ndarray:
+    """with_sharding_constraint by logical names; no-op without rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec_for(names, rules))
+    except (ValueError, RuntimeError):
+        return x  # outside jit/mesh context
+
+
+# ----------------------------------------------------------------------
+# Parameter specs by naming convention
+# ----------------------------------------------------------------------
+
+# key-name pattern -> logical axes per trailing dims (applied right-
+# aligned; leading stacked-layer / expert dims handled separately).
+_PARAM_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # projections into the sharded dimension: (d_model, out_tp)
+    (r"(w_q|w_kv?|w_v|w_gate|w_up|w_in|in_proj|w_dq|w_uq|w_ukv|qkv|"
+     r"w_shared_gate|w_shared_up|lm_head(_\d+)?)$", ("fsdp", "tp")),
+    # projections out of the sharded dimension: (in_tp, d_model)
+    (r"(w_o|w_out|w_down|out_proj|w_shared_down)$", ("tp", "fsdp")),
+    # embeddings: (vocab, d_model)
+    (r"embed(_\d+)?$", ("tp", "fsdp")),
+    # router: small, replicate
+    (r"router$", (None, None)),
+    # kv low-rank down-proj (d_model, small): shard only d_model
+    (r"w_dkv$", ("fsdp", None)),
+    # conv kernels (k, channels): shard channels
+    (r"conv_w$", (None, "tp")),
+    (r"(conv_b|dt_bias|a_log|d_skip)$", ("tp",)),
+    # biases on tp outputs
+    (r"(b_q|b_kv|b_v|b_in|b_gate|b_up)$", ("tp",)),
+    (r"(b_o|b_out|b_down)$", (None,)),
+    # per-head gates / recurrent weights (xlstm)
+    (r"(w_ig|w_fg|w_og|b_ig|b_fg|b_og|r_.*)$", (None,)),
+    # norms & everything small: replicate
+    (r"(scale|bias)$", (None,)),
+)
+
+
+def _match_param(name: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, spec in _PARAM_PATTERNS:
+        if re.search(pat, name):
+            spec = tuple(spec)
+            if len(spec) > ndim:
+                spec = spec[-ndim:]
+            if len(spec) < ndim:
+                # leading dims: stacked layers (None) / experts ('expert')
+                lead: Tuple[Optional[str], ...] = (None,) * (ndim - len(spec))
+                spec = lead + spec
+            return spec
+    return (None,) * ndim
+
+
+def param_logical_axes(params: Any, n_expert_hint: int = 0) -> Any:
+    """Pytree of logical-axis tuples matching ``params``.
+
+    Heuristics: the final key name selects the trailing-dim rule;
+    a leading dim equal to the expert count is tagged 'expert'
+    (stacked-layer leading dims stay replicated).
+    """
+    def visit(path, leaf):
+        name = str(path[-1].key) if path else ""
+        axes = list(_match_param(name, leaf.ndim))
+        if n_expert_hint and leaf.ndim >= 3:
+            # find the expert dim among leading dims; experts consume the
+            # 'model' axis, so drop 'tp' from the matrix dims (a mesh
+            # axis may appear only once per spec)
+            for i in range(leaf.ndim - 2):
+                if leaf.shape[i] == n_expert_hint and "expert" not in axes:
+                    axes = [None if a == "tp" else
+                            ("expert_fsdp" if a == "fsdp" else a)
+                            for a in axes]
+                    axes[i] = "expert"
+                    break
+        return tuple(axes)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def param_specs(params: Any, rules: Dict[str, Any],
+                n_expert_hint: int = 0) -> Any:
+    axes = param_logical_axes(params, n_expert_hint)
+    return jax.tree_util.tree_map(
+        lambda a: spec_for(a, rules), axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_shardings(params: Any, mesh: Mesh, rules: Dict[str, Any],
+                    n_expert_hint: int = 0) -> Any:
+    specs = param_specs(params, rules, n_expert_hint)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------
+# Decode-state / batch specs (divisibility-safe)
+# ----------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def safe_spec(shape: Tuple[int, ...], names: Sequence[Optional[str]],
+              mesh: Mesh, rules: Dict[str, Any]) -> P:
+    """spec_for, but drops any axis whose mesh extent does not divide
+    the dim (guaranteed-lowerable sharding)."""
+    parts = []
+    used: set = set()
+    for dim, n in zip(shape, names):
+        axis = rules.get(n) if n else None
+        flat = tuple(axis) if isinstance(axis, (list, tuple)) else (axis,)
+        if axis is None or any(a in used for a in flat if a):
+            parts.append(None)
+            continue
+        sz = _axis_size(mesh, axis)
+        if sz > 1 and dim % sz == 0:
+            parts.append(axis)
+            used.update(a for a in flat if a)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def decode_state_specs(state: Any, mesh: Mesh, rules: Dict[str, Any]) -> Any:
+    """Shardings for the decode state pytree (KV caches, SSM/xLSTM
+    states), matched by leaf key name with divisibility fallbacks:
+    KV caches prefer head sharding, then head_dim, then replicate."""
+    def visit(path, leaf):
+        name = str(path[-1].key) if path and hasattr(path[-1], "key") else ""
+        shape = leaf.shape
+        nd = leaf.ndim
+        def sp(*names):
+            # right-align names onto the trailing dims (leading dims are
+            # stacked-layer axes from the scanned segments)
+            pad = (None,) * (nd - len(names))
+            return safe_spec(shape, pad + names, mesh, rules)
+        if name in ("k", "v"):                  # (B, W, KH, D)
+            s = sp("batch", "cache_seq", "kv_heads", None)
+            if s[-2] is None:                   # heads didn't divide
+                s = sp("batch", "cache_seq", None, "tp")
+            return NamedSharding(mesh, s)
+        if name in ("c_kv", "k_rope"):          # (B, W, r)
+            return NamedSharding(mesh, sp("batch", "cache_seq", None))
+        if name == "slot_pos":
+            return NamedSharding(mesh, sp("batch", "cache_seq"))
+        if name == "ssm":                       # (B, H, P, N)
+            return NamedSharding(mesh, sp("batch", "heads", None, None))
+        if name == "conv":                      # (B, k-1, C)
+            return NamedSharding(mesh, sp("batch", None, "tp"))
+        if name == "c" and nd >= 4:             # mlstm (B, H, dqk, dv)
+            return NamedSharding(mesh, sp("batch", "heads", None, None))
+        if name == "n" and nd >= 3:
+            return NamedSharding(mesh, sp("batch", "heads", None))
+        if name == "m" and nd >= 2:
+            return NamedSharding(mesh, sp("batch", "heads"))
+        if name in ("c", "n", "h") and nd >= 2:  # slstm (B, D)
+            return NamedSharding(mesh, sp("batch", "tp"))
+        return NamedSharding(mesh, sp(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(visit, state)
+
+
+def batch_specs_sharding(batch: Any, mesh: Mesh,
+                         rules: Dict[str, Any]) -> Any:
+    def visit(path, leaf):
+        names: Tuple[Optional[str], ...] = \
+            ("batch",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, safe_spec(leaf.shape, names, mesh,
+                                             rules))
+    return jax.tree_util.tree_map_with_path(visit, batch)

@@ -1,0 +1,70 @@
+"""Serving engine: prefill + batched single-token decode over the
+unified KV/recurrent decode state.
+
+``prefill`` runs the full-sequence forward while *also* populating the
+decode state (by replaying the cache writes token-group-wise this would
+be the fused path on TPU; here we populate by running decode_step over
+the prompt — exact, simple, and the dry-run lowers ``serve_step``, which
+is the shape that matters).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape, cache_window
+from repro.models import model as lm
+from repro.models.common import ModelConfig
+
+
+def init_state(cfg: ModelConfig, batch: int, window: int,
+               dtype=None) -> List:
+    return lm.init_decode_state(cfg, batch, window,
+                                dtype or cfg.activation_dtype)
+
+
+def serve_step(cfg: ModelConfig, params: Any, state: List,
+               batch: Dict) -> Tuple[jnp.ndarray, List]:
+    """One decode step for a batch of sequences (the dry-run target)."""
+    return lm.decode_step(cfg, params, state, batch)
+
+
+def greedy_decode(cfg: ModelConfig, params: Any, prompt: jnp.ndarray,
+                  steps: int, window: int = 0) -> jnp.ndarray:
+    """Greedy generation (CPU-scale demo): prompt (B, S0) -> (B, S0+steps).
+
+    Prompt ingestion uses decode_step per position (exact cache
+    population); generation continues greedily.
+    """
+    b, s0 = prompt.shape[0], prompt.shape[-1]
+    window = window or cache_window(
+        cfg, InputShape("gen", s0 + steps, b, "decode"))
+    state = init_state(cfg, b, window)
+
+    step_fn = jax.jit(partial(serve_step, cfg))
+
+    def make_batch(tok, pos):
+        bt: Dict[str, Any] = {"tokens": tok}
+        if cfg.pos_type == "mrope":
+            bt["positions"] = jnp.broadcast_to(
+                pos[:, :, None], pos.shape + (3,))
+        else:
+            bt["positions"] = pos
+        return bt
+
+    toks = prompt
+    logits = None
+    for t in range(s0):
+        pos = jnp.full((b, 1), t, jnp.int32)
+        cur = toks[..., t:t + 1]
+        logits, state = step_fn(params, state, make_batch(cur, pos))
+    for t in range(steps):
+        last = logits[:, -1]                       # (B,V) | (B,K,V) audio
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)[..., None]
+        toks = jnp.concatenate([toks, nxt], axis=-1)
+        pos = jnp.full((b, 1), s0 + t, jnp.int32)
+        logits, state = step_fn(params, state, make_batch(nxt, pos))
+    return toks

@@ -1,0 +1,43 @@
+"""Job records for the discrete-event simulator."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.geometry import JobShape
+
+
+@dataclass
+class Job:
+    job_id: int
+    arrival: float
+    duration: float           # ideal contention-free runtime (seconds)
+    shape: JobShape
+
+    # -- filled by the simulator --
+    start: Optional[float] = None
+    finish: Optional[float] = None
+    dropped: bool = False
+    slowdown: float = 1.0
+    placement_meta: dict = field(default_factory=dict)
+
+    @property
+    def size(self) -> int:
+        return self.shape.size
+
+    @property
+    def scheduled(self) -> bool:
+        return self.start is not None
+
+    @property
+    def jct(self) -> Optional[float]:
+        """Completion time = queueing delay + (slowed) runtime."""
+        if self.finish is None:
+            return None
+        return self.finish - self.arrival
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        if self.start is None:
+            return None
+        return self.start - self.arrival

@@ -1,0 +1,53 @@
+"""Pytree checkpointing without orbax: one .npz per save, with
+path-encoded keys; restores exact structure onto the target pytree."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Optional[Any] = None,
+                    step: int = 0, meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    base = path[:-4] if path.endswith(".npz") else path
+    arrays, _ = _flatten({"params": params, "opt": opt_state or {}})
+    np.savez(base + ".npz", **arrays)
+    with open(base + ".meta.json", "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+
+
+def load_checkpoint(path: str, like_params: Any,
+                    like_opt: Optional[Any] = None):
+    """Restore into the structure of ``like_*`` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        {"params": like_params, "opt": like_opt or {}})
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    meta = {}
+    mp = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    if os.path.exists(mp):
+        with open(mp) as f:
+            meta = json.load(f)
+    return restored["params"], restored["opt"], meta

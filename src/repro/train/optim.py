@@ -1,0 +1,80 @@
+"""AdamW + schedules + global-norm clipping, pure JAX pytrees."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> Any:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+def adamw_update(cfg: OptimConfig, params: Any, grads: Any,
+                 state: Any) -> Tuple[Any, Any, dict]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["mu"],
+                                 state["nu"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

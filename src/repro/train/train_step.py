@@ -1,0 +1,79 @@
+"""Loss + train step (forward, backward, AdamW), grad-accum option."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as lm
+from repro.models.common import ModelConfig
+from .optim import OptimConfig, adamw_update
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """logits: (..., V); targets: int (...). Mean NLL in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: Dict,
+            use_kernel: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = lm.forward(cfg, params, batch, use_kernel=use_kernel)
+    targets = batch["targets"]
+    if cfg.arch_type == "audio":
+        # logits (B,S,K,V); targets (B,K,S)
+        targets = jnp.moveaxis(targets, 1, 2)
+    ce = cross_entropy(logits, targets)
+    total = ce + AUX_WEIGHT * aux
+    return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+def train_step(cfg: ModelConfig, opt_cfg: OptimConfig, params: Any,
+               opt_state: Any, batch: Dict, use_kernel: bool = False
+               ) -> Tuple[Any, Any, Dict]:
+    grad_fn = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, use_kernel), has_aux=True)
+    (_, metrics), grads = grad_fn(params)
+    new_params, new_opt, opt_metrics = adamw_update(
+        opt_cfg, params, grads, opt_state)
+    metrics = dict(metrics)
+    metrics.update(opt_metrics)
+    return new_params, new_opt, metrics
+
+
+def train_step_accum(cfg: ModelConfig, opt_cfg: OptimConfig, params: Any,
+                     opt_state: Any, batch: Dict, n_micro: int
+                     ) -> Tuple[Any, Any, Dict]:
+    """Gradient accumulation over ``n_micro`` microbatches (batch dim
+    split); reduces peak activation memory at the cost of re-running the
+    forward pass per microbatch."""
+    def micro(i):
+        return jax.tree_util.tree_map(
+            lambda t: t.reshape((n_micro, -1) + t.shape[1:])[i], batch)
+
+    grad_fn = jax.value_and_grad(
+        lambda p, mb: loss_fn(cfg, p, mb), has_aux=True)
+
+    def body(carry, i):
+        gsum, msum = carry
+        (_, metrics), g = grad_fn(params, micro(i))
+        gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+        return (gsum, msum + metrics["ce"]), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, ce_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
+                                     jnp.arange(n_micro))
+    grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+    new_params, new_opt, opt_metrics = adamw_update(
+        opt_cfg, params, grads, opt_state)
+    metrics = {"ce": ce_sum / n_micro}
+    metrics.update(opt_metrics)
+    return new_params, new_opt, metrics

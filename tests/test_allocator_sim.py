@@ -1,0 +1,223 @@
+"""Allocator policies + simulator behaviour + trace generator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (FirstFitPolicy, FoldingPolicy,
+                                  RFoldPolicy, ReconfigPolicy, make_policy)
+from repro.core.geometry import JobShape
+from repro.sim.job import Job
+from repro.sim.metrics import (aggregate, jct_percentiles, summarize,
+                               time_weighted_utilization)
+from repro.sim.simulator import Simulator
+from repro.traces.generator import TraceConfig, generate_trace, sample_shape
+
+
+# ---------------------------------------------------------------- policies
+def test_firstfit_rejects_oversized_dim():
+    ff = FirstFitPolicy((16, 16, 16))
+    assert ff.try_place(1, JobShape((4, 4, 32))) is None
+    assert not ff.can_ever_place(JobShape((4, 4, 32)))
+    assert ff.can_ever_place(JobShape((16, 16, 16)))
+
+
+def test_folding_beats_firstfit_on_long_1d():
+    fo = FoldingPolicy((16, 16, 16))
+    assert fo.can_ever_place(JobShape((18, 1, 1)))
+    p = fo.try_place(1, JobShape((18, 1, 1)))
+    assert p is not None and p.rings_intact
+
+
+def test_reconfig_places_paper_4x4x32():
+    rc = ReconfigPolicy(4096, 4)
+    p = rc.try_place(1, JobShape((4, 4, 32)))
+    assert p is not None
+    assert p.meta["num_cubes"] == 8
+    assert p.meta["wrap"] == (True, True, True)
+
+
+def test_rfold_prefers_fewest_cubes():
+    rf = RFoldPolicy(4096, 4)
+    p = rf.try_place(1, JobShape((18, 1, 1)))
+    assert p is not None
+    assert p.meta["num_cubes"] == 1          # folded into one cube
+    assert not p.broken_rings
+
+
+def test_rfold_beats_reconfig_on_cube_count():
+    rc, rf = ReconfigPolicy(4096, 4), RFoldPolicy(4096, 4)
+    shape = JobShape((4, 8, 2))              # paper: foldable to 4x4x4
+    pc = rc.try_place(1, shape)
+    pf = rf.try_place(1, shape)
+    assert pc.meta["num_cubes"] == 2
+    assert pf.meta["num_cubes"] == 1
+
+
+def test_release_restores_capacity():
+    rf = RFoldPolicy(512, 4)
+    p1 = rf.try_place(1, JobShape((8, 8, 8)))
+    assert p1 is not None
+    assert rf.try_place(2, JobShape((8, 8, 8))) is None
+    rf.release(1)
+    assert rf.try_place(2, JobShape((8, 8, 8))) is not None
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 100_000))
+def test_policies_never_double_book(seed):
+    rng = np.random.default_rng(seed)
+    pol = RFoldPolicy(512, 4)
+    live = []
+    for jid in range(25):
+        if live and rng.uniform() < 0.35:
+            pol.release(live.pop(rng.integers(len(live))))
+        dims = tuple(int(rng.integers(1, 10)) for _ in range(3))
+        if pol.try_place(jid, JobShape(dims)) is not None:
+            live.append(jid)
+        pol.cluster.check_invariants()
+
+
+def test_static_policies_never_double_book():
+    rng = np.random.default_rng(0)
+    pol = FoldingPolicy((8, 8, 8))
+    live = []
+    for jid in range(40):
+        if live and rng.uniform() < 0.4:
+            pol.release(live.pop(rng.integers(len(live))))
+        dims = tuple(int(rng.integers(1, 9)) for _ in range(3))
+        if pol.try_place(jid, JobShape(dims)) is not None:
+            live.append(jid)
+        pol.torus.check_invariants()
+
+
+# --------------------------------------------------------------- simulator
+def _jobs(specs):
+    return [Job(job_id=i, arrival=a, duration=d, shape=JobShape(s))
+            for i, (a, d, s) in enumerate(specs)]
+
+
+def test_fifo_head_of_line_blocking():
+    # job0 fills the cluster; job1 (too big to coexist) blocks job2 even
+    # though job2 would fit.
+    jobs = _jobs([(0.0, 100.0, (8, 8, 8)),
+                  (1.0, 10.0, (8, 8, 8)),
+                  (2.0, 10.0, (2, 2, 2))])
+    pol = RFoldPolicy(512, 4)
+    res = Simulator(pol, jobs).run()
+    j0, j1, j2 = res.jobs
+    assert j0.start == 0.0
+    assert j1.start == pytest.approx(100.0)
+    assert j2.start >= j1.start                   # blocked behind head
+    assert res.jcr == 1.0
+
+
+def test_incompatible_shape_dropped_not_blocking():
+    jobs = _jobs([(0.0, 50.0, (4, 4, 32)),       # impossible in 16^3 static
+                  (1.0, 5.0, (2, 2, 2))])
+    pol = FirstFitPolicy((16, 16, 16))
+    res = Simulator(pol, jobs).run()
+    assert res.jobs[0].dropped
+    assert res.jobs[1].start == pytest.approx(1.0)
+    assert res.jcr == 0.5
+
+
+def test_broken_ring_slowdown_applied():
+    jobs = _jobs([(0.0, 100.0, (6, 1, 1))])      # 6-ring, no wrap in 8^3
+    pol = FirstFitPolicy((8, 8, 8))
+    res = Simulator(pol, jobs, broken_ring_slowdown=1.17).run()
+    assert res.jobs[0].slowdown == pytest.approx(1.17)
+    assert res.jobs[0].finish == pytest.approx(117.0)
+    # folding closes the ring -> no slowdown
+    pol2 = FoldingPolicy((8, 8, 8))
+    res2 = Simulator(pol2, _jobs([(0.0, 100.0, (6, 1, 1))])).run()
+    assert res2.jobs[0].slowdown == 1.0
+
+
+def test_utilization_accounting():
+    jobs = _jobs([(0.0, 10.0, (8, 8, 8))])       # fills 512-XPU cluster
+    pol = RFoldPolicy(512, 4)
+    res = Simulator(pol, jobs).run()
+    util = time_weighted_utilization(res)
+    assert util["mean"] == pytest.approx(1.0)
+
+
+def test_metrics_aggregate():
+    s = aggregate([{"a": 1.0, "b": 2.0}, {"a": 3.0, "b": 4.0}])
+    assert s == {"a": 2.0, "b": 3.0}
+
+
+# ------------------------------------------------------------------ traces
+def test_trace_shapes_follow_paper_rule():
+    cfg = TraceConfig(num_jobs=400, seed=0)
+    jobs = generate_trace(cfg)
+    small = [j for j in jobs if j.size <= 256]
+    large = [j for j in jobs if j.size > 256]
+    assert all(j.shape.ndim <= 2 for j in small)
+    assert all(j.shape.ndim >= 2 for j in large)
+    assert all(1 <= j.size <= 4096 + 64 for j in jobs)
+    # arrivals sorted, durations positive
+    arr = [j.arrival for j in jobs]
+    assert arr == sorted(arr)
+    assert all(j.duration > 0 for j in jobs)
+
+
+def test_trace_shapes_are_cube4_decomposable():
+    cfg = TraceConfig(num_jobs=300, seed=1)
+    for j in generate_trace(cfg):
+        cubes = 1
+        for d in j.shape.dims:
+            cubes *= -(-d // 4)
+        assert cubes <= 64
+
+
+def test_trace_deterministic_by_seed():
+    a = generate_trace(TraceConfig(num_jobs=50, seed=5))
+    b = generate_trace(TraceConfig(num_jobs=50, seed=5))
+    assert [(j.arrival, j.shape.dims) for j in a] == \
+           [(j.arrival, j.shape.dims) for j in b]
+
+
+def test_paper_jcr_ordering_holds_on_small_trace():
+    """Weak-form Table 1: FirstFit < Folding < RFold(4^3) = 100%."""
+    cfg = TraceConfig(num_jobs=120, seed=11)
+    jcr = {}
+    for name, kw in [("firstfit", dict(dims=(16, 16, 16))),
+                     ("folding", dict(dims=(16, 16, 16))),
+                     ("rfold", dict(num_xpus=4096, cube_n=4))]:
+        pol = make_policy(name, **kw)
+        jcr[name] = Simulator(pol, generate_trace(cfg)).run().jcr
+    assert jcr["firstfit"] < jcr["folding"] < 1.0
+    assert jcr["rfold"] == 1.0
+
+
+# ----------------------------------------------------- beyond-paper
+def test_backfill_unblocks_small_jobs():
+    from repro.core.allocator import RFoldPolicy
+    jobs = _jobs([(0.0, 100.0, (8, 8, 4)),   # half the cluster
+                  (1.0, 10.0, (8, 8, 8)),     # cannot coexist: blocks FIFO
+                  (2.0, 10.0, (2, 2, 2))])
+    res = Simulator(RFoldPolicy(512, 4), jobs, backfill=True).run()
+    j2 = res.jobs[2]
+    assert j2.start == pytest.approx(2.0)     # backfilled immediately
+    # FIFO baseline: j2 waits behind the blocked head
+    res2 = Simulator(RFoldPolicy(512, 4),
+                     _jobs([(0.0, 100.0, (8, 8, 4)),
+                            (1.0, 10.0, (8, 8, 8)),
+                            (2.0, 10.0, (2, 2, 2))]), backfill=False).run()
+    assert res2.jobs[2].start > 2.0
+
+
+def test_best_effort_scatter_placement():
+    from repro.core.allocator import RFoldBestEffortPolicy
+    pol = RFoldBestEffortPolicy(64, 2, scatter_slowdown=1.5)
+    # fragment the cluster so no contiguous/folded 3x3x3 placement
+    # exists: occupy every cube's corner cell via a scatter allocation
+    pol.cluster.commit_scatter(99, [(cid, 0, 0, 0)
+                                    for cid in range(pol.cluster.num_cubes)])
+    p = pol.try_place(1, JobShape((3, 3, 3)))
+    assert p is not None
+    assert p.meta.get("kind") == "scatter"
+    assert p.meta["slowdown_factor"] == 1.5
+    pol.cluster.check_invariants()
+    pol.release(1)
+    assert pol.busy_xpus == pol.cluster.num_cubes  # only poison remains

@@ -1,0 +1,103 @@
+"""Geometry: Hamiltonian cycles, factorizations, neighbor math."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.geometry import (JobShape, cycle_is_valid, factor_pairs,
+                                 factorizations3, hamiltonian_cycle_2d,
+                                 hamiltonian_cycle_3d, hamiltonian_path_2d,
+                                 is_torus_neighbor, rotations, snake_order,
+                                 torus_delta, volume)
+
+
+def test_factorizations3_exact():
+    for n in (1, 2, 12, 17, 64, 360):
+        for t in factorizations3(n):
+            assert volume(t) == n
+    assert (4, 4, 4) in factorizations3(64)
+    assert all(max(t) <= 16 for t in factorizations3(4096, max_dim=16))
+
+
+def test_factor_pairs():
+    assert set(factor_pairs(6)) == {(1, 6), (2, 3), (3, 2), (6, 1)}
+    assert all(a * b == 36 for a, b in factor_pairs(36))
+
+
+def test_rotations_unique():
+    assert len(rotations((1, 2, 3))) == 6
+    assert len(rotations((2, 2, 3))) == 3
+    assert len(rotations((2, 2, 2))) == 1
+
+
+@pytest.mark.parametrize("a,b", [(2, 2), (2, 3), (2, 9), (4, 4), (3, 4),
+                                 (6, 5), (16, 16), (5, 4)])
+def test_hamiltonian_cycle_2d(a, b):
+    cyc = hamiltonian_cycle_2d(a, b)
+    assert len(cyc) == a * b
+    coords = [(i, j, 0) for (i, j) in cyc]
+    assert cycle_is_valid(coords, (a, b, 1))
+
+
+def test_hamiltonian_cycle_2d_rejects_odd():
+    with pytest.raises(ValueError):
+        hamiltonian_cycle_2d(3, 3)
+    with pytest.raises(ValueError):
+        hamiltonian_cycle_2d(1, 4)
+
+
+@pytest.mark.parametrize("dims", [(2, 2, 2), (2, 3, 3), (4, 3, 3),
+                                  (2, 2, 9), (4, 4, 4), (6, 5, 5),
+                                  (2, 9, 1), (1, 4, 4), (16, 4, 4)])
+def test_hamiltonian_cycle_3d(dims):
+    cyc = hamiltonian_cycle_3d(dims)
+    assert len(cyc) == volume(dims)
+    assert cycle_is_valid(cyc, dims)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.tuples(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8)))
+def test_hamiltonian_cycle_3d_property(dims):
+    ones = sum(1 for d in dims if d == 1)
+    if ones >= 2 or volume(dims) % 2:
+        return
+    cyc = hamiltonian_cycle_3d(dims)
+    assert len(cyc) == volume(dims)
+    assert cycle_is_valid(cyc, dims)
+
+
+def test_torus_delta_wrap():
+    assert torus_delta(0, 15, 16, True) == 1
+    assert torus_delta(0, 15, 16, False) == 15
+    assert torus_delta(3, 5, 16, True) == 2
+
+
+def test_is_torus_neighbor():
+    dims = (4, 4, 4)
+    assert is_torus_neighbor((0, 0, 0), (0, 0, 1), dims, (False,) * 3)
+    assert is_torus_neighbor((0, 0, 0), (3, 0, 0), dims, (True, False, False))
+    assert not is_torus_neighbor((0, 0, 0), (3, 0, 0), dims, (False,) * 3)
+    assert not is_torus_neighbor((0, 0, 0), (1, 1, 0), dims, (True,) * 3)
+    assert not is_torus_neighbor((0, 0, 0), (0, 0, 0), dims, (True,) * 3)
+
+
+def test_jobshape_classification():
+    assert JobShape((18, 1, 1)).ndim == 1
+    assert JobShape((4, 6, 1)).ndim == 2
+    assert JobShape((4, 4, 4)).ndim == 3
+    assert JobShape((1, 1, 1)).ndim == 1
+    assert JobShape((4, 6, 1)).size == 24
+    with pytest.raises(ValueError):
+        JobShape((0, 1, 1))
+
+
+def test_snake_order_covers():
+    order = snake_order((3, 4))
+    assert len(set(order)) == 12
+
+
+def test_hamiltonian_path_2d():
+    p = hamiltonian_path_2d(3, 5)
+    assert len(set(p)) == 15
+    for u, v in zip(p, p[1:]):
+        assert abs(u[0] - v[0]) + abs(u[1] - v[1]) == 1

@@ -1,0 +1,68 @@
+"""Hypothesis property tests on simulator + allocator invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import make_policy
+from repro.sim.simulator import Simulator
+from repro.traces.generator import TraceConfig, generate_trace
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["firstfit", "folding"]))
+def test_sim_invariants_static(seed, policy):
+    cfg = TraceConfig(num_jobs=40, seed=seed, target_load=2.0)
+    jobs = generate_trace(cfg)
+    pol = make_policy(policy, dims=(8, 8, 8))
+    res = Simulator(pol, jobs).run()
+    _check_invariants(res, pol)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sim_invariants_rfold(seed):
+    cfg = TraceConfig(num_jobs=30, seed=seed, target_load=2.0)
+    jobs = generate_trace(cfg)
+    pol = make_policy("rfold", num_xpus=512, cube_n=4)
+    res = Simulator(pol, jobs).run()
+    _check_invariants(res, pol)
+    pol.cluster.check_invariants()
+
+
+def _check_invariants(res, pol):
+    # cluster fully drained at the end
+    assert pol.busy_xpus == 0
+    for j in res.jobs:
+        if j.dropped:
+            assert j.start is None
+            continue
+        if j.finish is None:
+            continue
+        # causality + runtime >= ideal duration
+        assert j.start >= j.arrival
+        assert j.finish >= j.start + j.duration - 1e-9
+        assert j.jct >= j.duration - 1e-9
+    # utilization samples within [0, 1]
+    for _, u in res.utilization_samples:
+        assert -1e-9 <= u <= 1 + 1e-9
+    # FIFO order among started jobs that queued: a job can only start
+    # before an earlier-arriving job if that job was already running
+    started = [j for j in res.jobs if j.start is not None]
+    started.sort(key=lambda j: j.arrival)
+    for i in range(1, len(started)):
+        prev, cur = started[i - 1], started[i]
+        assert cur.start >= prev.start - 1e-9, "FIFO start order violated"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100_000))
+def test_rfold_never_worse_jcr_than_reconfig(seed):
+    """Folding only adds options: RFold's JCR dominates Reconfig's on
+    identical traces/cluster."""
+    cfg = TraceConfig(num_jobs=25, seed=seed)
+    jobs_a = generate_trace(cfg)
+    jobs_b = generate_trace(cfg)
+    rc = make_policy("reconfig", num_xpus=512, cube_n=4)
+    rf = make_policy("rfold", num_xpus=512, cube_n=4)
+    jcr_rc = Simulator(rc, jobs_a).run().jcr
+    jcr_rf = Simulator(rf, jobs_b).run().jcr
+    assert jcr_rf >= jcr_rc - 1e-9

@@ -1,0 +1,155 @@
+"""StaticTorus / ReconfigTorus occupancy, exclusivity, fitmask."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fitmask
+from repro.core.folding import enumerate_folds
+from repro.core.geometry import JobShape
+from repro.core.reconfig import ReconfigTorus
+from repro.core.torus import StaticTorus, canon_link
+
+
+# ----------------------------------------------------------------- fitmask
+def test_fitmask_empty_grid():
+    occ = np.zeros((4, 4, 4), bool)
+    assert fitmask.first_fit_origin(occ, (2, 2, 2)) == (0, 0, 0)
+    assert fitmask.count_fits(occ, (4, 4, 4)) == 1
+    assert fitmask.count_fits(occ, (5, 1, 1)) == 0
+
+
+def test_fitmask_blocked():
+    occ = np.zeros((4, 4, 4), bool)
+    occ[0, 0, 0] = True
+    assert fitmask.first_fit_origin(occ, (4, 4, 4)) is None
+    assert fitmask.first_fit_origin(occ, (1, 1, 1)) == (0, 0, 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 1000), st.tuples(st.integers(1, 5), st.integers(1, 5),
+                                       st.integers(1, 5)))
+def test_fitmask_matches_bruteforce(seed, box):
+    rng = np.random.default_rng(seed)
+    occ = rng.uniform(size=(6, 6, 6)) < 0.3
+    m = fitmask.fit_mask(occ, box)
+    a, b, c = box
+    for i in range(6 - a + 1):
+        for j in range(6 - b + 1):
+            for k in range(6 - c + 1):
+                assert m[i, j, k] == (not occ[i:i+a, j:j+b, k:k+c].any())
+
+
+# ------------------------------------------------------------ static torus
+def test_static_commit_release_invariants():
+    t = StaticTorus((8, 8, 8))
+    a1 = t.commit_box(1, (0, 0, 0), (2, 2, 2))
+    assert t.busy_xpus == 8
+    with pytest.raises(ValueError):
+        t.commit_box(2, (1, 1, 1), (2, 2, 2))  # overlap
+    t.check_invariants()
+    t.release(1)
+    assert t.busy_xpus == 0
+    t.check_invariants()
+
+
+def test_static_box_links_include_wrap_on_full_span():
+    t = StaticTorus((4, 4, 4))
+    a = t.commit_box(1, (0, 0, 0), (4, 1, 1))
+    wrap_link = canon_link((0, 0, 0), (3, 0, 0))
+    assert wrap_link in a.links
+    t.check_invariants()
+
+
+def test_link_exclusivity_enforced():
+    t = StaticTorus((8, 8, 8))
+    t.commit(1, [(0, 0, 0), (0, 0, 1)], [canon_link((0, 0, 0), (0, 0, 1))])
+    with pytest.raises(ValueError):
+        t.commit(2, [(0, 0, 2)], [canon_link((0, 0, 0), (0, 0, 1))])
+
+
+# ---------------------------------------------------------- reconfig torus
+def test_reconfig_place_within_one_cube():
+    rt = ReconfigTorus(512, 4)  # 8 cubes
+    fold = enumerate_folds(JobShape((2, 2, 2)), max_dim=32)[0]
+    plan = rt.place_fold(fold)
+    assert plan is not None and plan.num_cubes == 1
+    assert plan.num_ocs_links == 0
+    rt.commit(1, plan)
+    rt.check_invariants()
+    rt.release(1)
+    assert rt.busy_xpus == 0
+
+
+def test_reconfig_chain_with_wrap():
+    rt = ReconfigTorus(512, 4)
+    folds = [f for f in enumerate_folds(JobShape((8, 4, 4)), max_dim=32)
+             if f.kind == "identity" and f.box == (8, 4, 4)]
+    plan = rt.place_fold(folds[0])
+    assert plan is not None
+    assert plan.num_cubes == 2
+    assert plan.wrap == (True, True, True)  # 8 = 2 cubes, full extents
+    assert not plan.broken_rings
+    # OCS links: chain crossing + wrap closure on x: 2*16; wrap loops y,z
+    assert plan.num_ocs_links == 2 * 16 + 16 * 2 * 2
+
+
+def test_reconfig_alignment_constraint():
+    """Misaligned free space cannot host a chained job: fill one cube's
+    x=0..1 rows so only offset-2 space remains, then ask for a 2-cube
+    chain that needs offset 0 in both."""
+    rt = ReconfigTorus(128, 4)  # 2 cubes
+    rt.occ[0, :2, :, :] = True  # cube 0: x in 0..1 busy
+    folds = [f for f in enumerate_folds(JobShape((8, 4, 4)), max_dim=8)
+             if f.kind == "identity"]
+    plan = rt.place_fold(folds[0])
+    assert plan is None  # needs both cubes fully free
+
+
+def test_reconfig_too_large_rejected():
+    rt = ReconfigTorus(512, 4)
+    folds = enumerate_folds(JobShape((64, 1, 1)), max_dim=2048)
+    ident = [f for f in folds if f.kind == "identity"]
+    # 64x1x1 chain needs 16 cubes; only 8 exist
+    assert rt.place_fold(ident[0]) is None
+
+
+def test_reconfig_dedicated_mode_strands():
+    rt = ReconfigTorus(128, 4, dedicate_chained=True)
+    folds = [f for f in enumerate_folds(JobShape((8, 1, 1)), max_dim=8)
+             if f.kind == "identity"]
+    plan = rt.place_fold(folds[0])
+    rt.commit(1, plan)
+    # both cubes dedicated: nothing else placeable even though 120 free
+    fold2 = [f for f in enumerate_folds(JobShape((2, 2, 2)), max_dim=8)
+             if f.kind == "identity"]
+    assert rt.place_fold(fold2[0]) is None
+    rt.check_invariants()
+    rt.release(1)
+    assert rt.place_fold(fold2[0]) is not None
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_reconfig_random_commit_release_invariants(seed):
+    rng = np.random.default_rng(seed)
+    rt = ReconfigTorus(512, 4)
+    live = {}
+    jid = 0
+    for _ in range(30):
+        if live and rng.uniform() < 0.4:
+            k = list(live)[rng.integers(len(live))]
+            rt.release(k)
+            live.pop(k)
+        else:
+            dims = tuple(int(rng.integers(1, 9)) for _ in range(3))
+            folds = enumerate_folds(JobShape(dims), max_dim=32)
+            plan = None
+            for f in folds:
+                plan = rt.place_fold(f)
+                if plan:
+                    break
+            if plan:
+                rt.commit(jid, plan)
+                live[jid] = True
+                jid += 1
+        rt.check_invariants()
