@@ -20,10 +20,11 @@ def main() -> None:
     ap.add_argument("--num-jobs", type=int, default=120)
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument("--skip-micro", action="store_true")
+    ap.add_argument("--skip-alloc", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
-    from benchmarks import kernels_bench, paper_eval, roofline
+    from benchmarks import allocator_bench, kernels_bench, paper_eval, roofline
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -35,6 +36,11 @@ def main() -> None:
             eval_args = ["--full"]
         paper_eval.main(eval_args + ["--out",
                                      "experiments/paper_eval.json"])
+
+    if not args.skip_alloc:
+        print("=" * 70)
+        print("## Allocator / placement-engine benchmark")
+        allocator_bench.main(["--out", "BENCH_allocator.json"])
 
     if not args.skip_micro:
         print("=" * 70)

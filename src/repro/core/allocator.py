@@ -21,9 +21,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .folding import Fold, enumerate_folds, fold_links, verify_fold
-from .geometry import Coord, Dims, JobShape, volume
+from .geometry import Coord, Dims, JobShape, is_torus_neighbor, volume
 from .reconfig import ReconfigPlan, ReconfigTorus
-from .torus import StaticTorus
+from .torus import StaticTorus, canon_link
 
 
 @dataclass
@@ -119,7 +119,6 @@ class _StaticBase(PlacementPolicy):
         # an available wrap link); broken closures consume no link.
         wrap = self._wrap_for_box(fold.box, origin)
         links = []
-        from .geometry import is_torus_neighbor
         for (u, v) in fold_links(fold, origin, self.torus.dims):
             if is_torus_neighbor(u, v, self.torus.dims, self.torus.wrap_flags()):
                 # physical only if inside box or via full-span wrap
@@ -127,7 +126,6 @@ class _StaticBase(PlacementPolicy):
                 if direct or any(
                         wrap[ax] and abs(u[ax] - v[ax]) == self.torus.dims[ax] - 1
                         for ax in range(3)):
-                    from .torus import canon_link
                     links.append(canon_link(u, v))
         meta = {"fold": str(fold), "kind": fold.kind, "box": fold.box,
                 "origin": origin, "broken_rings": broken}
@@ -233,12 +231,52 @@ class _ReconfigBase(PlacementPolicy):
         return out
 
     offset_search = True
+    # Parity escape hatch: route everything through the retained naive
+    # engine (pure-python place_fold, clone-based can_ever_place).
+    use_naive = False
+
+    def _fold_bound(self, fold: Fold) -> Tuple:
+        """Optimistic lexicographic score bound for a fold, computed
+        without placing it: the minimal broken-ring count (wrap on every
+        axis whose extent admits it — wrap availability only ever shrinks
+        the broken set), the minimal cube count (offset 0), the minimal
+        OCS links (wrap only where the extent forces it), zero fresh
+        cubes. Lower-bounds every plan the fold can produce, so a fold
+        whose bound loses to the incumbent is skipped without placing."""
+        n = self.cluster.cube_n
+        cache = getattr(fold, "_bound_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(fold, "_bound_cache", cache)
+        hit = cache.get(n)
+        if hit is None:
+            a, b, c = fold.box
+            cross = (b * c, a * c, a * b)
+            ca = tuple(-(-e // n) for e in fold.box)
+            links = sum(
+                (ca[ax] - 1 + (1 if fold.box[ax] == ca[ax] * n else 0))
+                * cross[ax] for ax in range(3))
+            wrap_max = tuple(e % n == 0 for e in fold.box)
+            _, broken_min = verify_fold(fold, wrap_max)  # type: ignore[arg-type]
+            hit = (len(broken_min), volume(ca), links, 0)
+            cache[n] = hit
+        return hit
 
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
         best: Optional[ReconfigPlan] = None
+        free = self.num_xpus - self.busy_xpus
         for fold in self._folds(shape):
-            plan = self.cluster.place_fold(fold,
-                                           offset_search=self.offset_search)
+            if self.use_naive:
+                plan = self.cluster.place_fold_naive(
+                    fold, offset_search=self.offset_search)
+            else:
+                if shape.size > free:
+                    break  # every fold box has volume == job size
+                bound = best.score() if best is not None else None
+                if bound is not None and self._fold_bound(fold) >= bound:
+                    continue  # cannot strictly beat the incumbent
+                plan = self.cluster.place_fold(
+                    fold, offset_search=self.offset_search, bound=bound)
             if plan is None:
                 continue
             if best is None or plan.score() < best.score():
@@ -248,6 +286,30 @@ class _ReconfigBase(PlacementPolicy):
         self.cluster.commit(job_id, best)
         meta = dict(self.cluster.alloc_meta[job_id])
         return Placement(job_id, shape, best.broken_rings, meta)
+
+    def _can_ever_place(self, shape: JobShape) -> bool:
+        """Empty-cluster feasibility without a clone or placement: a
+        fold fits an empty cluster iff its extents are chainable and its
+        minimal (offset-0) cube grid fits the cube budget — best-fit
+        assignment cannot fail when every cube is free. Fold validity is
+        wrap-independent (missing wrap only breaks rings, it never
+        invalidates the embedding), so checking the offset-0 wrap flags
+        is exact."""
+        if self.use_naive:
+            fresh = self.empty_clone()
+            fresh.use_naive = True
+            return fresh.try_place(-1, shape) is not None
+        cl = self.cluster
+        n = cl.cube_n
+        for fold in self._folds(shape):
+            if any(e > cl.max_extent for e in fold.box):
+                continue
+            if volume(tuple(-(-e // n) for e in fold.box)) > cl.num_cubes:
+                continue
+            wrap0 = tuple(e % n == 0 for e in fold.box)
+            if verify_fold(fold, wrap0)[0]:  # type: ignore[arg-type]
+                return True
+        return False
 
 
 class ReconfigPolicy(_ReconfigBase):
@@ -307,6 +369,15 @@ class RFoldBestEffortPolicy(RFoldPolicy):
             self.cluster.num_xpus, self.cluster.cube_n,
             dedicate_chained=self.cluster.dedicate_chained,
             scatter_slowdown=self.scatter_slowdown)
+
+    def _can_ever_place(self, shape: JobShape) -> bool:
+        if super()._can_ever_place(shape):
+            return True
+        if self.use_naive:
+            return False  # the clone-based check already covered scatter
+        # Scatter fallback on an empty cluster: every cell is free and
+        # no cube is dedicated, so feasibility is just capacity.
+        return shape.size <= self.num_xpus
 
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
         p = super().try_place(job_id, shape)

@@ -21,6 +21,40 @@ import numpy as np
 from .geometry import Coord, Dims
 
 
+def integral_image(occ: np.ndarray) -> np.ndarray:
+    """3D integral image over the trailing axes: (..., X, Y, Z) ->
+    int64 (..., X+1, Y+1, Z+1); leading axes (if any) are batch dims.
+
+    ``ii[..., x, y, z]`` is the sum of ``occ[..., :x, :y, :z]``. Build
+    it once per occupancy state and answer any number of box queries
+    from it — this is the shared structure the allocator reuses across
+    all fold-box queries within one placement step.
+    """
+    shape = occ.shape[:-3] + tuple(d + 1 for d in occ.shape[-3:])
+    ii = np.zeros(shape, dtype=np.int64)
+    ii[..., 1:, 1:, 1:] = occ.astype(np.int64)
+    for ax in (-3, -2, -1):
+        np.cumsum(ii, axis=ax, out=ii)
+    return ii
+
+
+def window_sums_from_ii(ii: np.ndarray, box: Dims) -> np.ndarray:
+    """Window sums for every un-wrapped origin, from a precomputed
+    (possibly batched) integral image (..., X+1, Y+1, Z+1). Empty along
+    the window axes if the box does not fit at all."""
+    a, b, c = box
+    X, Y, Z = (d - 1 for d in ii.shape[-3:])
+    if a > X or b > Y or c > Z:
+        return np.zeros(ii.shape[:-3] + (max(X - a + 1, 0),
+                                         max(Y - b + 1, 0),
+                                         max(Z - c + 1, 0)), dtype=np.int64)
+    s = (ii[..., a:, b:, c:] - ii[..., :-a, b:, c:] - ii[..., a:, :-b, c:]
+         - ii[..., a:, b:, :-c] + ii[..., :-a, :-b, c:]
+         + ii[..., :-a, b:, :-c] + ii[..., a:, :-b, :-c]
+         - ii[..., :-a, :-b, :-c])
+    return s
+
+
 def window_sums(occ: np.ndarray, box: Dims) -> np.ndarray:
     """Sum of ``occ`` over every un-wrapped a×b×c window.
 
@@ -32,20 +66,42 @@ def window_sums(occ: np.ndarray, box: Dims) -> np.ndarray:
     if a > X or b > Y or c > Z:
         return np.zeros((max(X - a + 1, 0), max(Y - b + 1, 0),
                          max(Z - c + 1, 0)), dtype=np.int64)
-    ii = np.zeros((X + 1, Y + 1, Z + 1), dtype=np.int64)
-    ii[1:, 1:, 1:] = occ.astype(np.int64)
-    np.cumsum(ii, axis=0, out=ii)
-    np.cumsum(ii, axis=1, out=ii)
-    np.cumsum(ii, axis=2, out=ii)
-    s = (ii[a:, b:, c:] - ii[:-a, b:, c:] - ii[a:, :-b, c:] - ii[a:, b:, :-c]
-         + ii[:-a, :-b, c:] + ii[:-a, b:, :-c] + ii[a:, :-b, :-c]
-         - ii[:-a, :-b, :-c])
-    return s
+    return window_sums_from_ii(integral_image(occ), box)
+
+
+def batched_integral_image(occ: np.ndarray) -> np.ndarray:
+    """Per-grid integral images for a batch: (B, X, Y, Z) bool/int ->
+    (B, X+1, Y+1, Z+1) int64. One fused pass for all grids (e.g. all
+    cubes of a reconfigurable torus)."""
+    return integral_image(occ)
+
+
+Slice3 = Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]
+
+
+def block_sums_from_ii(ii: np.ndarray, local: Slice3) -> np.ndarray:
+    """Occupied-cell count of the fixed sub-block ``local`` in every grid
+    of a batched integral image (B, X+1, Y+1, Z+1) -> int64 (B,)."""
+    (x0, x1), (y0, y1), (z0, z1) = local
+    return (ii[:, x1, y1, z1] - ii[:, x0, y1, z1] - ii[:, x1, y0, z1]
+            - ii[:, x1, y1, z0] + ii[:, x0, y0, z1] + ii[:, x0, y1, z0]
+            + ii[:, x1, y0, z0] - ii[:, x0, y0, z0])
+
+
+def block_free_from_ii(ii: np.ndarray, local: Slice3) -> np.ndarray:
+    """Bool (B,): sub-block ``local`` entirely free in each grid."""
+    return block_sums_from_ii(ii, local) == 0
 
 
 def fit_mask(occ: np.ndarray, box: Dims) -> np.ndarray:
     """Bool mask over origins where the box fits in free space."""
     return window_sums(occ, box) == 0
+
+
+def fit_mask_batched(occ: np.ndarray, box: Dims) -> np.ndarray:
+    """Batched fit mask: (B, X, Y, Z) -> bool (B, X-a+1, Y-b+1, Z-c+1)
+    via one shared batched integral image (no per-grid python loop)."""
+    return window_sums_from_ii(integral_image(occ), box) == 0
 
 
 def first_fit_origin(occ: np.ndarray, box: Dims) -> Optional[Coord]:

@@ -31,6 +31,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .geometry import (Coord, Dims, JobShape, factor_pairs, factorizations3,
                        hamiltonian_cycle_2d, hamiltonian_cycle_3d,
                        is_torus_neighbor, rotations, volume)
@@ -112,15 +114,61 @@ def verify_fold(fold: Fold, wrap_available: WrapFlags) -> Tuple[bool, List[int]]
     return hit
 
 
-def _verify_fold_impl(fold: Fold, wrap_available: WrapFlags) -> Tuple[bool, List[int]]:
-    """Certify the fold as a ring-product embedding.
+def _verify_fold_impl(fold: Fold,
+                      wrap_available: WrapFlags) -> Tuple[bool, List[int]]:
+    """Certify the fold as a ring-product embedding (vectorized).
 
     Returns (mapping_valid, broken_ring_axes). ``mapping_valid`` means
     injective, in-bounds, and every ring edge maps to a physical link
     given ``wrap_available`` (per box axis). Ring axes whose closing
     edge fails only due to missing wrap are reported broken (the fold is
     then only usable by policies that tolerate broken rings).
+
+    All ring edges of one job axis are checked as a single numpy batch
+    (``np.roll`` of the C-order index grid gives the +1-mod-d neighbour
+    of every logical node at once); the per-edge python loop survives as
+    :func:`_verify_fold_reference`, the parity oracle.
     """
+    d = fold.job_dims
+    V = d[0] * d[1] * d[2]
+    coords = np.asarray(fold.mapping, dtype=np.int64)  # (V, 3), C-order
+    box = np.asarray(fold.box, dtype=np.int64)
+    if (coords < 0).any() or (coords >= box[None, :]).any():
+        return False, []
+    flat = (coords[:, 0] * box[1] + coords[:, 1]) * box[2] + coords[:, 2]
+    if np.unique(flat).size != V:
+        return False, []
+    broken: set[int] = set()
+    idx = np.arange(V).reshape(d)
+    for ax in range(3):
+        if d[ax] < 2:
+            continue
+        iu, iv = idx, np.roll(idx, -1, axis=ax)  # v = u+1 (mod d[ax])
+        if d[ax] == 2:
+            # a 2-ring is a single duplex link: keep only the u[ax]==0 edge
+            sel = [slice(None)] * 3
+            sel[ax] = slice(0, 1)
+            iu, iv = iu[tuple(sel)], iv[tuple(sel)]
+        ad = np.abs(coords[iu.ravel()] - coords[iv.ravel()])  # (E, 3)
+        # sorted(deltas) == [0, 0, 1]  <=>  sum(deltas) == 1  (non-neg ints)
+        dw = ad.copy()
+        for k in range(3):
+            if wrap_available[k]:
+                dw[:, k] = np.minimum(ad[:, k], box[k] - ad[:, k])
+        ok = dw.sum(axis=1) == 1            # link given available wrap
+        if ok.all():
+            continue
+        full = np.minimum(ad, box[None, :] - ad).sum(axis=1) == 1
+        if (~ok & ~full).any():
+            return False, []                # not a link at all
+        broken.add(ax)                      # closes only through missing wrap
+    return True, sorted(broken)
+
+
+def _verify_fold_reference(fold: Fold,
+                           wrap_available: WrapFlags) -> Tuple[bool, List[int]]:
+    """Edge-by-edge reference implementation of ``_verify_fold_impl``
+    (kept as the parity oracle for the vectorized certifier)."""
     coords = [fold.embed(l) for l in _logical_coords(fold.job_dims)]
     if len(set(coords)) != len(coords):
         return False, []
@@ -162,15 +210,14 @@ def fold_links(fold: Fold, origin: Coord,
 def _identity_folds(job_dims: Dims) -> List[Fold]:
     """All axis rotations of the original shape."""
     folds = []
+    logical = np.indices(job_dims).reshape(3, -1).T  # (V, 3), C-order
     for perm in set(itertools.permutations((0, 1, 2))):
         box = tuple(job_dims[perm.index(ax)] for ax in range(3))
         # logical axis a sits on box axis perm[a]
-        mapping = []
-        for l in _logical_coords(job_dims):
-            c = [0, 0, 0]
-            for a in range(3):
-                c[perm[a]] = l[a]
-            mapping.append(tuple(c))
+        c = np.empty_like(logical)
+        for a in range(3):
+            c[:, perm[a]] = logical[:, a]
+        mapping = [tuple(row) for row in c.tolist()]
         wrap_req = [False, False, False]
         for a in range(3):
             if job_dims[a] > 2:
@@ -276,12 +323,6 @@ def _fold_3d_halving(job_dims: Dims) -> List[Fold]:
         folds.append(Fold(job_dims, box, "halving3d",
                           (A > 2, False, True), tuple(mapping)))
     return folds
-
-
-def _wrap_line(job_dims: Dims) -> List[Fold]:
-    """ring(A) laid out straight; needs a full wrap extent. Covered by
-    identity folds (box (A,1,1)) — kept for clarity in enumeration."""
-    return []
 
 
 import functools

@@ -33,6 +33,7 @@ then fewest OCS links, then least new-cube fragmentation.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import math
 from dataclasses import dataclass, field
@@ -40,10 +41,51 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import fitmask
 from .folding import Fold, WrapFlags, verify_fold
 from .geometry import Coord, Dims, volume
 
 Slice3 = Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]  # half-open
+
+
+@functools.lru_cache(maxsize=None)
+def _offset_candidates_cached(extent: int, n: int) -> Tuple[int, ...]:
+    ca = -(-extent // n)
+    slack = ca * n - extent
+    return tuple(range(0, slack + 1))
+
+
+@functools.lru_cache(maxsize=None)
+def _axis_spans(ext: int, off: int, n: int):
+    """Per-cube spans of one axis at a corner offset: ((grid_i,
+    (lo, hi), length), ...) — geometry only, cached forever."""
+    spans = []
+    lo_g, hi_g = off, off + ext
+    for i in range(-(-hi_g // n)):
+        lo = max(lo_g, i * n) - i * n
+        hi = min(hi_g, (i + 1) * n) - i * n
+        if hi > lo:
+            spans.append((i, (lo, hi), hi - lo))
+    return tuple(spans)
+
+
+@functools.lru_cache(maxsize=131072)
+def _pieces_cached(box: Dims, offsets: Coord, n: int):
+    """Per-(box, offsets) span decomposition, computed once ever:
+    (pieces_spec, best-fit assignment order, cube_grid). Geometry only —
+    independent of occupancy."""
+    spans = [_axis_spans(e, o, n) for e, o in zip(box, offsets)]
+    pieces: List[Tuple[Coord, Slice3]] = []
+    sizes: List[int] = []
+    for ix, spx, lx in spans[0]:
+        for iy, spy, ly in spans[1]:
+            lxy = lx * ly
+            for iz, spz, lz in spans[2]:
+                pieces.append(((ix, iy, iz), (spx, spy, spz)))
+                sizes.append(lxy * lz)
+    cube_grid = tuple(ax_spans[-1][0] + 1 for ax_spans in spans)
+    order = tuple(sorted(range(len(pieces)), key=lambda i: -sizes[i]))
+    return tuple(pieces), order, cube_grid
 
 
 @dataclass
@@ -104,6 +146,45 @@ class ReconfigTorus:
         self.dedicated = np.full(self.num_cubes, -1, dtype=np.int64)
         self.allocations: Dict[int, List[Piece]] = {}
         self.alloc_meta: Dict[int, dict] = {}
+        # Occupancy epoch: bumped on every commit/release/scatter. All
+        # occupancy-derived state consumed by ``place_fold`` is cached
+        # per epoch and shared across every fold/offset query in one
+        # allocator step. Direct writes to ``occ``/``dedicated`` must be
+        # followed by ``bump_epoch()`` once any query has been issued.
+        self._epoch = 0
+        self._busy = 0
+        self._cache_epoch = -1
+        self._ii: Optional[np.ndarray] = None           # batched integral image
+        self._free_cnt: Optional[np.ndarray] = None     # (C,) free cells/cube
+        self._cube_empty: Optional[np.ndarray] = None   # (C,) bool
+        self._order_key: Optional[np.ndarray] = None    # best-fit sort key
+        self._block_masks: Dict[Slice3, np.ndarray] = {}
+        self._sorted_cands: Dict[Tuple[Slice3, bool], np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    def bump_epoch(self) -> None:
+        """Invalidate cached occupancy-derived state (call after any
+        direct mutation of ``occ``/``dedicated``)."""
+        self._epoch += 1
+        self._busy = int(self.occ.sum())
+
+    def _derived(self) -> None:
+        """Refresh per-epoch derived state: one batched integral image
+        over all cubes plus per-cube free counts / best-fit sort keys."""
+        if self._cache_epoch == self._epoch:
+            return
+        n3 = self.cube_n ** 3
+        self._ii = fitmask.batched_integral_image(self.occ)
+        self._free_cnt = n3 - self._ii[:, -1, -1, -1]
+        self._cube_empty = self._free_cnt == n3
+        # Best-fit ordering: least leftover first, non-empty cubes break
+        # ties (the piece size shifts every key equally, so one key
+        # serves all piece sizes); np.argmin's first-minimum rule becomes
+        # a stable sort with index tiebreak.
+        self._order_key = self._free_cnt * 2 + self._cube_empty
+        self._block_masks = {}
+        self._sorted_cands = {}
+        self._cache_epoch = self._epoch
 
     # ------------------------------------------------------------------
     @property
@@ -112,7 +193,7 @@ class ReconfigTorus:
 
     @property
     def busy_xpus(self) -> int:
-        return int(self.occ.sum())
+        return self._busy
 
     def utilization(self) -> float:
         return self.busy_xpus / self.num_xpus
@@ -126,10 +207,7 @@ class ReconfigTorus:
     def _offset_candidates(self, extent: int) -> List[int]:
         """Corner offsets on one axis that do not inflate the cube count
         beyond ceil(extent / n)."""
-        n = self.cube_n
-        ca = -(-extent // n)
-        slack = ca * n - extent
-        return list(range(0, slack + 1))
+        return list(_offset_candidates_cached(extent, self.cube_n))
 
     def _pieces_for(self, box: Dims, offsets: Coord) -> List[Tuple[Coord, Slice3]]:
         """Virtual grid positions and per-cube local sub-blocks."""
@@ -151,10 +229,39 @@ class ReconfigTorus:
         return out
 
     def _block_free_mask(self, local: Slice3) -> np.ndarray:
-        """Bool mask over cubes: sub-block ``local`` entirely free."""
+        """Bool mask over cubes: sub-block ``local`` entirely free.
+        Answered from the per-epoch batched integral image and memoized
+        per local slice (every fold/offset in a step reuses it)."""
+        self._derived()
+        m = self._block_masks.get(local)
+        if m is None:
+            m = fitmask.block_free_from_ii(self._ii, local)
+            self._block_masks[local] = m
+        return m
+
+    def _block_free_mask_naive(self, local: Slice3) -> np.ndarray:
+        """Reference implementation (direct slice scan), retained for
+        the parity tests."""
         (x0, x1), (y0, y1), (z0, z1) = local
         sub = self.occ[:, x0:x1, y0:y1, z0:z1]
         return ~sub.any(axis=(1, 2, 3))
+
+    def _cands_for(self, local: Slice3, chained: bool) -> np.ndarray:
+        """Cube ids eligible for a piece, pre-sorted by the best-fit key
+        (stable, index tiebreak) — equivalent to np.argmin over the
+        leftover key but computed once per (local, chained) per epoch."""
+        self._derived()
+        key = (local, chained)
+        arr = self._sorted_cands.get(key)
+        if arr is None:
+            if chained:
+                mask = self._cube_empty & (self.dedicated < 0)
+            else:
+                mask = self._block_free_mask(local) & (self.dedicated < 0)
+            ids = np.nonzero(mask)[0]
+            arr = ids[np.argsort(self._order_key[ids], kind="stable")]
+            self._sorted_cands[key] = arr
+        return arr
 
     @staticmethod
     def _ocs_links(box: Dims, offsets: Coord, cube_grid: Dims, n: int,
@@ -172,15 +279,98 @@ class ReconfigTorus:
         return total
 
     # ------------------------------------------------------------------
-    def place_fold(self, fold: Fold,
-                   offset_search: bool = True) -> Optional[ReconfigPlan]:
+    def place_fold(self, fold: Fold, offset_search: bool = True,
+                   bound: Optional[Tuple] = None) -> Optional[ReconfigPlan]:
         """Best reconfiguration plan for one fold candidate, or None.
 
         ``offset_search=False`` pins every piece to the cube corner
         (offset 0) — the naive Reconfig baseline whose partial-cube
         fragmentation the paper criticises; RFold searches offsets as
         part of "virtually reconfiguring the topology to best match the
-        shape"."""
+        shape".
+
+        ``bound`` is an incumbent lexicographic score: only plans that
+        strictly beat it are returned, and offsets whose optimistic
+        score bound (exact broken/cubes/links, fresh=0) cannot beat the
+        incumbent are skipped without running cube assignment. With
+        ``bound=None`` the result equals :meth:`place_fold_naive`.
+        """
+        box = fold.box
+        n = self.cube_n
+        if any(ext > self.max_extent for ext in box):
+            return None
+        self._derived()
+        cube_empty = self._cube_empty
+        best: Optional[ReconfigPlan] = None
+        single_cube = all(ext <= n for ext in box)
+        # Port alignment only binds multi-cube chains; a single-cube job
+        # is an ordinary within-cube box placement, so its offsets are
+        # always searchable. The naive (Reconfig) baseline pins chained
+        # pieces to the cube corner.
+        if offset_search or single_cube:
+            offset_space = itertools.product(
+                *(_offset_candidates_cached(e, n) for e in box))
+        else:
+            offset_space = [(0, 0, 0)]
+        for offsets in offset_space:
+            # Everything needed to prune is arithmetic on (box, offsets):
+            # cube grid, wrap flags, broken rings (memoized per fold) and
+            # OCS links. The span decomposition is only fetched for
+            # offsets that can still beat the incumbent.
+            cube_grid = tuple(-(-(o + e) // n)
+                              for o, e in zip(offsets, box))
+            ncubes = volume(cube_grid)
+            if ncubes > self.num_cubes:
+                continue
+            wrap = tuple(
+                offsets[ax] == 0 and box[ax] == cube_grid[ax] * n
+                for ax in range(3))
+            valid, broken = verify_fold(fold, wrap)  # type: ignore[arg-type]
+            if not valid:
+                continue
+            links = self._ocs_links(box, offsets, cube_grid, n,
+                                    wrap)  # type: ignore[arg-type]
+            incumbent = best.score() if best is not None else bound
+            if incumbent is not None and \
+                    (len(broken), ncubes, links, 0) >= incumbent:
+                continue
+            pieces_spec, order, cube_grid = _pieces_cached(box, offsets, n)
+            multi = len(pieces_spec) > 1
+            chained = multi and self.dedicate_chained
+            taken: set = set()
+            assignment: Dict[int, int] = {}
+            ok = True
+            for idx in order:
+                local = pieces_spec[idx][1]
+                chosen = -1
+                for cid in self._cands_for(local, chained):
+                    if cid not in taken:
+                        chosen = int(cid)
+                        break
+                if chosen < 0:
+                    ok = False
+                    break
+                assignment[idx] = chosen
+                taken.add(chosen)
+            if not ok:
+                continue
+            pieces = [Piece(pieces_spec[i][0], assignment[i],
+                            pieces_spec[i][1]) for i in range(len(pieces_spec))]
+            fresh = int(sum(cube_empty[p.cube_id] for p in pieces))
+            plan = ReconfigPlan(
+                fold=fold, offsets=offsets, cube_grid=cube_grid,  # type: ignore
+                pieces=pieces, wrap=wrap,  # type: ignore[arg-type]
+                broken_rings=tuple(broken),
+                num_ocs_links=links, fresh_cubes=fresh)
+            if incumbent is None or plan.score() < incumbent:
+                best = plan
+        return best
+
+    def place_fold_naive(self, fold: Fold,
+                         offset_search: bool = True) -> Optional[ReconfigPlan]:
+        """Reference implementation of :meth:`place_fold` (pure-python
+        offset loop, no caching/pruning). Retained as the parity oracle
+        for the vectorized engine."""
         box = fold.box
         n = self.cube_n
         if any(ext > self.max_extent for ext in box):
@@ -188,10 +378,6 @@ class ReconfigTorus:
         best: Optional[ReconfigPlan] = None
         cube_empty = ~self.occ.any(axis=(1, 2, 3))
         single_cube = all(ext <= n for ext in box)
-        # Port alignment only binds multi-cube chains; a single-cube job
-        # is an ordinary within-cube box placement, so its offsets are
-        # always searchable. The naive (Reconfig) baseline pins chained
-        # pieces to the cube corner.
         if offset_search or single_cube:
             offset_space = itertools.product(*(self._offset_candidates(e)
                                                for e in box))
@@ -221,7 +407,7 @@ class ReconfigTorus:
                     mask = cube_empty & (self.dedicated < 0) & ~taken
                 else:
                     # per-face-position OCS: shareable; sub-block free
-                    mask = (self._block_free_mask(local)
+                    mask = (self._block_free_mask_naive(local)
                             & (self.dedicated < 0) & ~taken)
                 if not mask.any():
                     ok = False
@@ -273,6 +459,8 @@ class ReconfigTorus:
                     raise ValueError("chained cube must be empty at commit")
                 self.dedicated[p.cube_id] = job_id
             self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = True
+        self._epoch += 1
+        self._busy += sum(p.size for p in plan.pieces)
         self.allocations[job_id] = list(plan.pieces)
         self.alloc_meta[job_id] = {
             "fold": str(plan.fold), "kind": plan.fold.kind,
@@ -288,6 +476,8 @@ class ReconfigTorus:
             self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = False
             if self.dedicated[p.cube_id] == job_id:
                 self.dedicated[p.cube_id] = -1
+            self._busy -= p.size
+        self._epoch += 1
         self.alloc_meta.pop(job_id, None)
 
     # ------------------------------------------------------------------
@@ -317,6 +507,8 @@ class ReconfigTorus:
             self.occ[cid, x, y, z] = True
             pieces.append(Piece((0, 0, 0), cid,
                                 ((x, x + 1), (y, y + 1), (z, z + 1))))
+        self._epoch += 1
+        self._busy += len(pieces)
         self.allocations[job_id] = pieces
         self.alloc_meta[job_id] = {"kind": "scatter",
                                    "num_cubes": len({c[0] for c in cells})}
@@ -341,3 +533,5 @@ class ReconfigTorus:
                     ded[p.cube_id] = jid
         if not (ded == self.dedicated).all():
             raise AssertionError("dedication registry out of sync")
+        if self._busy != int(self.occ.sum()):
+            raise AssertionError("busy counter out of sync")

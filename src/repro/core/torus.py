@@ -54,6 +54,33 @@ class StaticTorus:
         self.owner = np.full(self.dims, -1, dtype=np.int64)
         self.link_owner: Dict[Link, int] = {}
         self.allocations: Dict[int, Allocation] = {}
+        # Occupancy epoch: bumped on every commit/release. Derived state
+        # (integral image, per-box fit answers, busy count) is cached per
+        # epoch so one allocator step reuses a single cumsum across all
+        # fold-box queries. Direct writes to ``occ`` must be followed by
+        # ``bump_epoch()``.
+        self._epoch = 0
+        self._busy = 0
+        self._fit_epoch = -1
+        self._fit_ii: Optional[np.ndarray] = None
+        self._fit_origin: Dict[Dims, Optional[Coord]] = {}
+        self._fit_count: Dict[Dims, int] = {}
+
+    # ------------------------------------------------------------------
+    def bump_epoch(self) -> None:
+        """Invalidate cached occupancy-derived state (call after any
+        direct mutation of ``occ``)."""
+        self._epoch += 1
+        self._busy = int(self.occ.sum())
+
+    def _fit_state(self):
+        from . import fitmask
+        if self._fit_epoch != self._epoch:
+            self._fit_ii = fitmask.integral_image(self.occ)
+            self._fit_origin = {}
+            self._fit_count = {}
+            self._fit_epoch = self._epoch
+        return self._fit_ii
 
     # ------------------------------------------------------------------
     @property
@@ -62,7 +89,7 @@ class StaticTorus:
 
     @property
     def busy_xpus(self) -> int:
-        return int(self.occ.sum())
+        return self._busy
 
     def utilization(self) -> float:
         return self.busy_xpus / self.num_xpus
@@ -85,14 +112,29 @@ class StaticTorus:
 
     def find_free_box(self, box: Dims) -> Optional[Coord]:
         """First (lexicographic) origin where an un-wrapped a×b×c box of
-        free XPUs exists, or None. Delegates the sliding-window search
-        to the fitmask kernel wrapper (reduce_window on CPU/TPU)."""
-        from . import fitmask  # local import: kernels pull in jax
-        return fitmask.first_fit_origin(self.occ, box)
+        free XPUs exists, or None. All queries at one occupancy epoch
+        share a single integral image; repeated boxes are memoized."""
+        box = tuple(int(b) for b in box)
+        ii = self._fit_state()
+        if box not in self._fit_origin:
+            from . import fitmask
+            m = fitmask.window_sums_from_ii(ii, box) == 0
+            if m.size == 0 or not m.any():
+                self._fit_origin[box] = None
+            else:
+                flat = int(np.argmax(m))  # first True in C order
+                self._fit_origin[box] = tuple(
+                    int(v) for v in np.unravel_index(flat, m.shape))
+        return self._fit_origin[box]
 
     def count_free_boxes(self, box: Dims) -> int:
-        from . import fitmask
-        return fitmask.count_fits(self.occ, box)
+        box = tuple(int(b) for b in box)
+        ii = self._fit_state()
+        if box not in self._fit_count:
+            from . import fitmask
+            m = fitmask.window_sums_from_ii(ii, box) == 0
+            self._fit_count[box] = int(m.sum())
+        return self._fit_count[box]
 
     # ------------------------------------------------------------------
     def _links_for_box(self, origin: Coord, box: Dims) -> FrozenSet[Link]:
@@ -148,6 +190,8 @@ class StaticTorus:
             self.owner[c] = job_id
         for l in links:
             self.link_owner[l] = job_id
+        self._epoch += 1
+        self._busy += len(coords)
         alloc = Allocation(job_id, coords, links, dict(meta or {}))
         self.allocations[job_id] = alloc
         return alloc
@@ -167,6 +211,8 @@ class StaticTorus:
             self.owner[c] = -1
         for l in alloc.links:
             del self.link_owner[l]
+        self._epoch += 1
+        self._busy -= len(alloc.coords)
 
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:
@@ -187,3 +233,5 @@ class StaticTorus:
             raise AssertionError("link double-booked")
         if set(link_counts) != set(self.link_owner):
             raise AssertionError("link registry out of sync")
+        if self._busy != int(self.occ.sum()):
+            raise AssertionError("busy counter out of sync")

@@ -1,0 +1,8 @@
+"""Cross-version jax/pallas compatibility aliases."""
+from jax.experimental.pallas import tpu as _pltpu
+
+# Renamed across jax releases: newer trees expose ``CompilerParams``,
+# older ones ``TPUCompilerParams``. Alias locally instead of patching
+# the shared jax namespace.
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))

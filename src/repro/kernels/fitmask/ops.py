@@ -20,8 +20,9 @@ def fitmask(occ, box: Tuple[int, int, int], engine: str = "auto"):
     if squeeze:
         occ = occ[None]
     if engine == "numpy":
-        out = np.stack([np_engine.fit_mask(np.asarray(o), box).astype(np.int32)
-                        for o in np.asarray(occ)])
+        # One shared batched integral image for the whole batch (no
+        # per-grid python loop) — same trick the allocator hot path uses.
+        out = np_engine.fit_mask_batched(np.asarray(occ), box).astype(np.int32)
         x, y, z = occ.shape[1:]
         pad = [(0, 0), (0, x - out.shape[1]), (0, y - out.shape[2]),
                (0, z - out.shape[3])]

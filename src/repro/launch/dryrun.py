@@ -170,12 +170,21 @@ def probe_depths(cfg: ModelConfig):
     return (2, 4)
 
 
+def _cost_dict(compiled):
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of dicts, newer ones the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _compile_cost(cfg: ModelConfig, shape: InputShape, multi_pod: bool):
     mesh, jitted, args = build_dryrun(cfg, shape, multi_pod)
     with mesh:
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         try:
             hlo = compiled.as_text()
         except Exception:
@@ -202,7 +211,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         try:
             hlo = compiled.as_text()
         except Exception:

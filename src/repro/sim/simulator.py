@@ -55,11 +55,18 @@ class Simulator:
 
     def __init__(self, policy: PlacementPolicy, jobs: Sequence[Job],
                  broken_ring_slowdown: float = 1.17,
-                 backfill: bool = False):
+                 backfill: bool = False, gated: bool = True):
         self.policy = policy
         self.jobs = sorted(jobs, key=lambda j: j.arrival)
         self.broken_ring_slowdown = broken_ring_slowdown
         self.backfill = backfill
+        # Event-driven drain watermark: a head job that failed to place
+        # can only be unblocked by a COMPLETION (arrivals never free
+        # capacity under FIFO), so arrival events behind a blocked head
+        # skip the placement retry entirely. ``gated=False`` restores
+        # the naive retry-on-every-event behaviour (parity oracle).
+        self.gated = gated
+        self._head_blocked = False
         self.queue: List[Job] = []
         self.events: List[Tuple[float, int, int, Job]] = []
         self._seq = itertools.count()
@@ -83,6 +90,7 @@ class Simulator:
         """FIFO with head-of-line blocking + incompatible-shape removal
         (paper behaviour); with backfill, later jobs may start when the
         head is blocked."""
+        self._head_blocked = False
         i = 0
         while i < len(self.queue):
             job = self.queue[i]
@@ -93,6 +101,7 @@ class Simulator:
             placement = self.policy.try_place(job.job_id, job.shape)
             if placement is None:
                 if not self.backfill:
+                    self._head_blocked = True
                     return  # head blocks
                 i += 1
                 continue
@@ -106,6 +115,13 @@ class Simulator:
             t, kind, _, job = heapq.heappop(self.events)
             if kind == ARRIVAL:
                 self.queue.append(job)
+                # A blocked head stays blocked across arrivals: cluster
+                # state is unchanged, so the retry would fail again and
+                # the new arrival cannot start ahead of it under FIFO.
+                if (self.gated and not self.backfill and self._head_blocked
+                        and len(self.queue) > 1):
+                    self._sample(t)
+                    continue
             else:
                 self.policy.release(job.job_id)
             self._drain_queue(t)

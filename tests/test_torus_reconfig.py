@@ -99,6 +99,7 @@ def test_reconfig_alignment_constraint():
     chain that needs offset 0 in both."""
     rt = ReconfigTorus(128, 4)  # 2 cubes
     rt.occ[0, :2, :, :] = True  # cube 0: x in 0..1 busy
+    rt.bump_epoch()             # direct occ writes must be announced
     folds = [f for f in enumerate_folds(JobShape((8, 4, 4)), max_dim=8)
              if f.kind == "identity"]
     plan = rt.place_fold(folds[0])
