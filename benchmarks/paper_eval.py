@@ -1,22 +1,26 @@
 """Paper evaluation reproductions: Table 1 (JCR), Fig 3 (JCT percentiles),
-Fig 4 (utilization CDF). One function per paper table/figure.
+Fig 4 (utilization CDF), driven by the parallel evaluation subsystem
+(``repro.eval``): the run x policy matrix fans out across a process
+pool, every run is checkpointed, and the three tables are derived from
+one shared set of per-run records (each config is simulated once, not
+once per figure).
 
 Defaults are CI-sized (runs=3, 200 jobs); pass --full for the paper's
-100-run averaging.
+100-run x 500-job averaging. An interrupted sweep resumes from
+--ckpt-dir; pass --fresh to discard checkpoints. Runner wall-clock
+stats land in BENCH_paper_eval.json (--bench-out).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
-from typing import Dict, List
+from typing import Dict
 
-import numpy as np
-
-from repro.core.allocator import make_policy
-from repro.sim.metrics import aggregate, summarize, utilization_cdf
-from repro.sim.simulator import Simulator
-from repro.traces.generator import TraceConfig, generate_trace
+from repro.eval import (EvalRunner, aggregate_by_label, fig3, fig4,
+                        make_tasks, table1)
+from repro.eval.aggregate import PAPER_TABLE1
 
 # Policy matrix as evaluated by the paper.
 TABLE1_CONFIGS = [
@@ -28,88 +32,101 @@ TABLE1_CONFIGS = [
     ("RFold (4^3)", "rfold", dict(num_xpus=4096, cube_n=4)),
 ]
 
-# Fig 3 compares JCT only where JCR == 100%.
-FIG3_CONFIGS = [
-    ("Reconfig (4^3)", "reconfig", dict(num_xpus=4096, cube_n=4)),
-    ("RFold (4^3)", "rfold", dict(num_xpus=4096, cube_n=4)),
+# Fig 3 compares JCT only where JCR == 100%; 4^3 overlaps Table 1,
+# 2^3 is Fig-3-only.
+FIG3_EXTRA_CONFIGS = [
     ("Reconfig (2^3)", "reconfig", dict(num_xpus=4096, cube_n=2)),
     ("RFold (2^3)", "rfold", dict(num_xpus=4096, cube_n=2)),
 ]
+FIG3_LABELS = ["Reconfig (4^3)", "RFold (4^3)",
+               "Reconfig (2^3)", "RFold (2^3)"]
 
-PAPER_TABLE1 = {   # paper-reported Avg JCR (%)
-    "FirstFit (16^3)": 10.4, "Folding (16^3)": 44.11,
-    "Reconfig (8^3)": 31.46, "RFold (8^3)": 73.35,
-    "Reconfig (4^3)": 100.0, "RFold (4^3)": 100.0,
-}
+DEFAULT_CKPT_DIR = os.path.join("experiments", "paper_eval_ckpt")
 
 
-def _run_policy(label: str, name: str, kw: dict, runs: int,
-                num_jobs: int, load: float, seed0: int):
-    summaries, cdfs = [], []
-    for r in range(runs):
-        cfg = TraceConfig(num_jobs=num_jobs, seed=seed0 + r,
-                          target_load=load)
-        pol = make_policy(name, **kw)
-        res = Simulator(pol, generate_trace(cfg)).run()
-        summaries.append(summarize(res))
-        cdfs.append(utilization_cdf(res))
-    agg = aggregate(summaries)
-    levels = cdfs[0][0]
-    cdf = np.mean([c for _, c in cdfs], axis=0)
-    return agg, (levels, cdf)
+def _configs_for(which: str):
+    if which == "fig3":
+        table1_43 = [c for c in TABLE1_CONFIGS if "4^3" in c[0]]
+        return table1_43 + FIG3_EXTRA_CONFIGS
+    if which in ("table1", "fig4"):
+        return list(TABLE1_CONFIGS)
+    return list(TABLE1_CONFIGS) + FIG3_EXTRA_CONFIGS
 
+
+def _run_matrix(configs, runs: int, num_jobs: int, load: float,
+                seed0: int, workers, ckpt_dir, emit=print):
+    tasks = make_tasks(configs, runs, num_jobs, load, seed0)
+    runner = EvalRunner(checkpoint_dir=ckpt_dir, workers=workers, emit=emit)
+    records = runner.run(tasks)
+    return aggregate_by_label(records), runner.last_stats
+
+
+def _legacy_aggs(aggs: Dict[str, Dict]) -> Dict[str, Dict]:
+    """{label: metric means} — the schema the pre-subsystem emitters
+    and experiments/paper_eval.json consumers expect."""
+    return {label: a["agg"] for label, a in aggs.items()}
+
+
+def _emit_table1(t1: Dict[str, Dict], runs: int, emit=print) -> None:
+    emit("# Table 1 — Job Completion Rate (avg over %d runs)" % runs)
+    emit("policy,jcr_pct,paper_jcr_pct")
+    for label, row in t1.items():
+        emit("%s,%.2f,%.2f" % (label, row["jcr_pct"], row["paper_jcr_pct"]))
+
+
+def _emit_fig3(f3: Dict, emit=print) -> None:
+    emit("# Fig 3 — JCT p50/p90/p99 (policies with 100%% JCR)")
+    emit("policy,jct_p50_s,jct_p90_s,jct_p99_s")
+    for label in FIG3_LABELS:
+        p = f3["percentiles"].get(label)
+        if p:
+            emit("%s,%.0f,%.0f,%.0f" % (label, p["p50"], p["p90"], p["p99"]))
+    for n, r in f3["ratios"].items():
+        emit("ratio Reconfig/RFold (%s): p50=%.1fx p90=%.1fx p99=%.1fx "
+             "(paper 4^3: 11x/6x/2x, 2^3: <=1.3x)"
+             % (n, r["p50"], r["p90"], r["p99"]))
+
+
+def _emit_fig4(f4: Dict, emit=print) -> None:
+    emit("# Fig 4 — cluster utilization (time-weighted)")
+    emit("policy,util_mean,util_p50,util_p90")
+    for label, _, _ in TABLE1_CONFIGS:
+        a = f4["per_policy"].get(label)
+        if a:
+            a = a["agg"]
+            emit("%s,%.3f,%.3f,%.3f" % (label, a["util_mean"],
+                                        a["util_p50"], a["util_p90"]))
+    for key, d in f4["deltas"].items():
+        emit("%s = +%.1f pts absolute (paper: +%.0f)"
+             % (key, d["ours_pts"], d["paper_pts"]))
+
+
+# -- pre-subsystem API kept for callers/tests --------------------------
 
 def table1_jcr(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
                seed0: int = 100, emit=print) -> Dict[str, Dict]:
-    emit("# Table 1 — Job Completion Rate (avg over %d runs)" % runs)
-    emit("policy,jcr_pct,paper_jcr_pct")
-    out = {}
-    for label, name, kw in TABLE1_CONFIGS:
-        agg, _ = _run_policy(label, name, kw, runs, num_jobs, load, seed0)
-        out[label] = agg
-        emit("%s,%.2f,%.2f" % (label, 100 * agg["jcr"], PAPER_TABLE1[label]))
-    return out
+    aggs, _ = _run_matrix(TABLE1_CONFIGS, runs, num_jobs, load, seed0,
+                          workers=0, ckpt_dir=None)
+    _emit_table1(table1(aggs), runs, emit)
+    return _legacy_aggs(aggs)
 
 
 def fig3_jct(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
              seed0: int = 100, emit=print) -> Dict[str, Dict]:
-    emit("# Fig 3 — JCT p50/p90/p99 (policies with 100%% JCR)")
-    emit("policy,jct_p50_s,jct_p90_s,jct_p99_s")
-    out = {}
-    for label, name, kw in FIG3_CONFIGS:
-        agg, _ = _run_policy(label, name, kw, runs, num_jobs, load, seed0)
-        out[label] = agg
-        emit("%s,%.0f,%.0f,%.0f" % (label, agg["jct_p50"], agg["jct_p90"],
-                                    agg["jct_p99"]))
-    for n in ("4^3", "2^3"):
-        rc, rf = out.get(f"Reconfig ({n})"), out.get(f"RFold ({n})")
-        if rc and rf:
-            emit("ratio Reconfig/RFold (%s): p50=%.1fx p90=%.1fx p99=%.1fx "
-                 "(paper 4^3: 11x/6x/2x, 2^3: <=1.3x)"
-                 % (n, rc["jct_p50"] / rf["jct_p50"],
-                    rc["jct_p90"] / rf["jct_p90"],
-                    rc["jct_p99"] / rf["jct_p99"]))
-    return out
+    aggs, _ = _run_matrix(_configs_for("fig3"), runs, num_jobs, load,
+                          seed0, workers=0, ckpt_dir=None)
+    _emit_fig3(fig3(aggs), emit)
+    return _legacy_aggs(aggs)
 
 
 def fig4_utilization(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
                      seed0: int = 100, emit=print) -> Dict[str, Dict]:
-    emit("# Fig 4 — cluster utilization (time-weighted)")
-    emit("policy,util_mean,util_p50,util_p90")
-    out = {}
-    for label, name, kw in TABLE1_CONFIGS:
-        agg, cdf = _run_policy(label, name, kw, runs, num_jobs, load, seed0)
-        out[label] = {"agg": agg, "cdf": [list(map(float, c)) for c in cdf]}
-        emit("%s,%.3f,%.3f,%.3f" % (label, agg["util_mean"], agg["util_p50"],
-                                    agg["util_p90"]))
-    ff = out["FirstFit (16^3)"]["agg"]["util_mean"]
-    rc = out["Reconfig (4^3)"]["agg"]["util_mean"]
-    rf = out["RFold (4^3)"]["agg"]["util_mean"]
-    emit("RFold - FirstFit = +%.1f pts absolute (paper: +57)"
-         % (100 * (rf - ff)))
-    emit("RFold - Reconfig = +%.1f pts absolute (paper: +20)"
-         % (100 * (rf - rc)))
-    return out
+    aggs, _ = _run_matrix(TABLE1_CONFIGS, runs, num_jobs, load, seed0,
+                          workers=0, ckpt_dir=None)
+    f4 = fig4(aggs)
+    _emit_fig4(f4, emit)
+    return {label: {"agg": a["agg"], "cdf": a["cdf"]}
+            for label, a in f4["per_policy"].items()}
 
 
 def main(argv=None) -> None:
@@ -117,25 +134,78 @@ def main(argv=None) -> None:
     ap.add_argument("--runs", type=int, default=3)
     ap.add_argument("--num-jobs", type=int, default=200)
     ap.add_argument("--load", type=float, default=1.5)
+    ap.add_argument("--seed0", type=int, default=100)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale averaging (100 runs, 500 jobs)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool width (default: cpu count; "
+                         "<=1 runs inline)")
+    ap.add_argument("--ckpt-dir", type=str, default=DEFAULT_CKPT_DIR,
+                    help="per-run checkpoint dir ('' disables)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore + remove existing checkpoints")
     ap.add_argument("--out", type=str, default="")
+    ap.add_argument("--bench-out", type=str, default=None,
+                    help="runner wall-clock stats JSON ('' disables; "
+                         "default: BENCH_paper_eval.json for CI-sized "
+                         "runs, experiments/BENCH_paper_eval_full.json "
+                         "for --full, so paper-scale sweeps don't "
+                         "clobber the committed CI-sized snapshot)")
     ap.add_argument("--which", type=str, default="all",
                     choices=["all", "table1", "fig3", "fig4"])
     args = ap.parse_args(argv)
     runs, n = (100, 500) if args.full else (args.runs, args.num_jobs)
+    bench_out = args.bench_out
+    if bench_out is None:
+        bench_out = (os.path.join("experiments", "BENCH_paper_eval_full.json")
+                     if args.full else "BENCH_paper_eval.json")
+    ckpt_dir = args.ckpt_dir or None
+    if args.fresh and ckpt_dir and os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.endswith(".json"):
+                os.remove(os.path.join(ckpt_dir, name))
+
     t0 = time.time()
-    results = {}
+    aggs, stats = _run_matrix(_configs_for(args.which), runs, n, args.load,
+                              args.seed0, args.workers, ckpt_dir)
+    results: Dict = {}
     if args.which in ("all", "table1"):
-        results["table1"] = table1_jcr(runs, n, args.load)
+        t1 = table1(aggs)
+        _emit_table1(t1, runs)
+        results["table1"] = {label: aggs[label]["agg"] for label in t1}
+        results["table1_deltas"] = t1
     if args.which in ("all", "fig3"):
-        results["fig3"] = fig3_jct(runs, n, args.load)
+        f3 = fig3(aggs)
+        _emit_fig3(f3)
+        results["fig3"] = {label: aggs[label]["agg"]
+                           for label in FIG3_LABELS if label in aggs}
+        results["fig3_ratios"] = f3["ratios"]
     if args.which in ("all", "fig4"):
-        results["fig4"] = fig4_utilization(runs, n, args.load)
-    print(f"# total {time.time() - t0:.0f}s")
+        f4 = fig4({label: a for label, a in aggs.items()
+                   if label in PAPER_TABLE1})
+        _emit_fig4(f4)
+        results["fig4"] = {label: {"agg": a["agg"], "cdf": a["cdf"]}
+                           for label, a in f4["per_policy"].items()}
+        results["fig4_deltas"] = f4["deltas"]
+    wall = time.time() - t0
+    print(f"# total {wall:.0f}s (pool: {stats})")
     if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, default=float)
+    if bench_out:
+        bench = {
+            "config": {"runs": runs, "num_jobs": n, "load": args.load,
+                       "seed0": args.seed0, "which": args.which,
+                       "full": args.full},
+            "pool": stats,
+            "wall_s": round(wall, 3),
+            "per_policy_sim_s": {label: a["sim_s_total"]
+                                 for label, a in aggs.items()},
+        }
+        os.makedirs(os.path.dirname(bench_out) or ".", exist_ok=True)
+        with open(bench_out, "w") as f:
+            json.dump(bench, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -86,9 +86,14 @@ def paper_table(path: str) -> str:
         res = json.load(f)
     out = []
     if "table1" in res:
-        paper = {"FirstFit (16^3)": 10.4, "Folding (16^3)": 44.11,
-                 "Reconfig (8^3)": 31.46, "RFold (8^3)": 73.35,
-                 "Reconfig (4^3)": 100.0, "RFold (4^3)": 100.0}
+        # Paper reference numbers: read from the artifact itself (new
+        # eval subsystem embeds them as table1_deltas); fall back to
+        # the canonical dict for pre-subsystem JSONs.
+        if "table1_deltas" in res:
+            paper = {k: v["paper_jcr_pct"]
+                     for k, v in res["table1_deltas"].items()}
+        else:
+            from repro.eval.aggregate import PAPER_TABLE1 as paper
         out.append("| Policy | Paper JCR % | Ours JCR % |")
         out.append("|---|---|---|")
         for k, v in res["table1"].items():
@@ -109,10 +114,48 @@ def paper_table(path: str) -> str:
     return "\n".join(out)
 
 
+def bench_table(alloc_path: str = "BENCH_allocator.json",
+                eval_path: str = "BENCH_paper_eval.json") -> str:
+    """Perf trajectory: placement-engine rates (BENCH_allocator.json)
+    alongside end-to-end eval wall-clock (BENCH_paper_eval.json)."""
+    out = []
+    if os.path.exists(alloc_path):
+        with open(alloc_path) as f:
+            alloc = json.load(f)
+        out.append("| policy bench | scale | sim s | placements/s | JCR |")
+        out.append("|---|---|---|---|---|")
+        for label, scales in alloc.get("policies", {}).items():
+            for scale, r in scales.items():
+                out.append(f"| {label} | {scale} | {r['sim_seconds']:.2f} "
+                           f"| {r['placements_per_sec']:.0f} "
+                           f"| {r['jcr']:.3f} |")
+        base = alloc.get("baseline", {})
+        if "speedup_vs_naive" in base:
+            out.append(f"\nIncremental engine speedup vs naive RFold "
+                       f"baseline: {base['speedup_vs_naive']:.1f}x")
+    if os.path.exists(eval_path):
+        with open(eval_path) as f:
+            ev = json.load(f)
+        cfg, pool = ev.get("config", {}), ev.get("pool", {})
+        out.append(f"\nPaper eval ({cfg.get('runs')} runs x "
+                   f"{cfg.get('num_jobs')} jobs): {ev.get('wall_s')}s "
+                   f"wall on {pool.get('workers')} workers "
+                   f"({pool.get('sim_s_total')}s sim total, "
+                   f"{pool.get('reused_from_checkpoint')}/"
+                   f"{pool.get('tasks')} from checkpoints)")
+        per_pol = ev.get("per_policy_sim_s", {})
+        if per_pol:
+            out.append("\n| policy | total sim s |")
+            out.append("|---|---|")
+            for label, s in sorted(per_pol.items(), key=lambda kv: -kv[1]):
+                out.append(f"| {label} | {s:.1f} |")
+    return "\n".join(out) if out else "(no BENCH_*.json artifacts yet)"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
-                    choices=["all", "dryrun", "roofline", "paper"])
+                    choices=["all", "dryrun", "roofline", "paper", "bench"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -125,6 +168,9 @@ def main() -> None:
             os.path.exists("experiments/paper_eval.json"):
         print("\n### Paper validation\n")
         print(paper_table("experiments/paper_eval.json"))
+    if args.which in ("all", "bench"):
+        print("\n### Perf trajectory (BENCH_*.json)\n")
+        print(bench_table())
 
 
 if __name__ == "__main__":

@@ -18,6 +18,8 @@ def main() -> None:
                     help="paper-scale averaging (100 runs)")
     ap.add_argument("--runs", type=int, default=2)
     ap.add_argument("--num-jobs", type=int, default=120)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="eval process-pool width (default: cpu count)")
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument("--skip-micro", action="store_true")
     ap.add_argument("--skip-alloc", action="store_true")
@@ -34,8 +36,13 @@ def main() -> None:
                      "--num-jobs", str(args.num_jobs)]
         if args.full:
             eval_args = ["--full"]
-        paper_eval.main(eval_args + ["--out",
-                                     "experiments/paper_eval.json"])
+        if args.workers is not None:
+            eval_args += ["--workers", str(args.workers)]
+        # paper_eval fans the run x policy matrix across a process pool
+        # with per-run checkpointing (see repro.eval); wall-clock stats
+        # land in BENCH_paper_eval.json next to BENCH_allocator.json.
+        paper_eval.main(eval_args + ["--out", "experiments/paper_eval.json",
+                                     "--bench-out", "BENCH_paper_eval.json"])
 
     if not args.skip_alloc:
         print("=" * 70)

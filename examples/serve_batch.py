@@ -9,7 +9,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
-from repro.configs.shapes import cache_window, smoke_shape
 from repro.models import model as lm
 from repro.serve import engine
 

@@ -18,12 +18,22 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
 from .folding import Fold, enumerate_folds, fold_links, verify_fold
 from .geometry import Coord, Dims, JobShape, is_torus_neighbor, volume
 from .reconfig import ReconfigPlan, ReconfigTorus
 from .torus import StaticTorus, canon_link
+
+
+def shape_key(shape: JobShape) -> Dims:
+    """Canonical rotation-invariant key for a job shape.
+
+    Every policy treats rotations of a shape as the same placement
+    problem (rotation is default behaviour, §2), so feasibility — both
+    ``can_ever_place`` and "does it fit the cluster *right now*" — is a
+    function of the sorted extents only. Shared by the policies'
+    admission cache and the simulator's backfill feasibility watermark.
+    """
+    return tuple(sorted(shape.dims, reverse=True))
 
 
 @dataclass
@@ -66,7 +76,7 @@ class PlacementPolicy:
         raise NotImplementedError
 
     def can_ever_place(self, shape: JobShape) -> bool:
-        key = tuple(sorted(shape.dims, reverse=True))
+        key = shape_key(shape)
         hit = self._can_place_cache.get(key)
         if hit is None:
             hit = self._can_ever_place(shape)

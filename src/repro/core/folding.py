@@ -27,15 +27,16 @@ certifying).
 """
 from __future__ import annotations
 
+import functools
 import itertools
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .geometry import (Coord, Dims, JobShape, factor_pairs, factorizations3,
                        hamiltonian_cycle_2d, hamiltonian_cycle_3d,
-                       is_torus_neighbor, rotations, volume)
+                       is_torus_neighbor, volume)
 
 WrapFlags = Tuple[bool, bool, bool]
 
@@ -312,7 +313,6 @@ def _fold_3d_halving(job_dims: Dims) -> List[Fold]:
         # mapping from the *original* logical axes (i over job_dims[0]..)
         mapping = []
         d0, d1, d2 = job_dims
-        inv = [perm.index(a) for a in range(3)]
         for l in _logical_coords(job_dims):
             x, y, z = (l[perm[0]], l[perm[1]], l[perm[2]])
             if y < B // 2:
@@ -323,9 +323,6 @@ def _fold_3d_halving(job_dims: Dims) -> List[Fold]:
         folds.append(Fold(job_dims, box, "halving3d",
                           (A > 2, False, True), tuple(mapping)))
     return folds
-
-
-import functools
 
 
 def enumerate_folds(shape: JobShape, max_dim: Optional[int] = None,

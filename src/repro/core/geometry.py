@@ -7,9 +7,8 @@ hot numeric path (free-box search over the occupancy grid) lives in
 from __future__ import annotations
 
 import itertools
-import math
 from dataclasses import dataclass
-from typing import Iterable, Iterator, Sequence, Tuple
+from typing import Iterator, Sequence, Tuple
 
 Coord = Tuple[int, int, int]
 Dims = Tuple[int, int, int]

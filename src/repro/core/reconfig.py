@@ -35,9 +35,8 @@ from __future__ import annotations
 
 import functools
 import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

@@ -10,12 +10,11 @@ exclusivity on every commit.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .geometry import (Coord, Dims, is_torus_neighbor, iter_box,
-                       torus_delta, volume)
+from .geometry import Coord, Dims, is_torus_neighbor, iter_box, volume
 
 Link = Tuple[Coord, Coord]
 

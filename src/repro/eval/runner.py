@@ -1,0 +1,232 @@
+"""Process-pool evaluation runner with per-run JSON checkpointing.
+
+A unit of work (:class:`EvalTask`) is one seeded simulator run of one
+policy configuration. Tasks are independent, so the runner fans them
+out across worker processes; every finished task is checkpointed as one
+JSON file, keyed by a fingerprint of the task's full configuration, so
+an interrupted sweep resumes from the completed subset instead of
+restarting.
+
+Determinism contract: the per-run seed depends only on ``(seed0,
+run_idx)`` — never on the worker count, the executor schedule, or which
+checkpoints already exist — so pool runs, serial runs and resumed runs
+all produce identical records.
+"""
+from __future__ import annotations
+
+import glob
+import hashlib
+import json
+import os
+import re
+import time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def derive_seed(seed0: int, run_idx: int) -> int:
+    """Seed for run ``run_idx`` of a sweep rooted at ``seed0``.
+
+    A pure function of ``(seed0, run_idx)``: stable across worker
+    counts and completion order, and shared by every policy in the
+    matrix so policies are compared on *paired* traces (the paper
+    averages each policy over the same 100 traces). Kept as the
+    affine form the pre-subsystem sequential harness used, so
+    historical CI-sized numbers remain reproducible.
+    """
+    return seed0 + run_idx
+
+
+@dataclass
+class EvalTask:
+    """One seeded simulator run of one policy configuration."""
+
+    label: str                 # display label, e.g. "RFold (4^3)"
+    policy: str                # repro.core.allocator.make_policy name
+    policy_kw: Dict = field(default_factory=dict)
+    run_idx: int = 0
+    seed: int = 0
+    num_jobs: int = 200
+    load: float = 1.5
+    trace_kw: Dict = field(default_factory=dict)   # extra TraceConfig fields
+    sim_kw: Dict = field(default_factory=dict)     # extra Simulator kwargs
+
+    def fingerprint(self) -> str:
+        """Hash of every field that affects the run's outcome. The
+        display label is deliberately excluded: renaming a config, or
+        evaluating one config under two labels (the ablation arms do),
+        must neither invalidate nor duplicate checkpoints."""
+        fields = asdict(self)
+        fields.pop("label")
+        blob = json.dumps(fields, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def checkpoint_name(self) -> str:
+        slug = re.sub(r"[^A-Za-z0-9]+", "_", self.label).strip("_").lower()
+        return f"{slug}__r{self.run_idx}__{self.fingerprint()}.json"
+
+
+def make_tasks(configs: Sequence[Tuple[str, str, dict]], runs: int,
+               num_jobs: int, load: float, seed0: int,
+               trace_kw: Optional[dict] = None,
+               sim_kw: Optional[dict] = None) -> List[EvalTask]:
+    """Expand ``(label, policy, policy_kw)`` configs into the run
+    matrix, with paired per-run seeds across configs."""
+    return [
+        EvalTask(label=label, policy=policy, policy_kw=dict(kw),
+                 run_idx=r, seed=derive_seed(seed0, r),
+                 num_jobs=num_jobs, load=load,
+                 trace_kw=dict(trace_kw or {}), sim_kw=dict(sim_kw or {}))
+        for label, policy, kw in configs for r in range(runs)
+    ]
+
+
+def run_task(task: EvalTask) -> Dict:
+    """Execute one task (worker-side) and return its record.
+
+    Imports are local so that pool workers forked before the simulator
+    stack is loaded stay cheap, and so this module stays importable in
+    minimal tooling contexts (e.g. CI lint steps).
+    """
+    from repro.core.allocator import make_policy
+    from repro.sim.metrics import summarize, utilization_cdf
+    from repro.sim.simulator import Simulator
+    from repro.traces.generator import TraceConfig, generate_trace
+
+    cfg = TraceConfig(num_jobs=task.num_jobs, seed=task.seed,
+                      target_load=task.load, **task.trace_kw)
+    jobs = generate_trace(cfg)
+    policy = make_policy(task.policy, **task.policy_kw)
+    t0 = time.perf_counter()
+    res = Simulator(policy, jobs, **task.sim_kw).run()
+    wall = time.perf_counter() - t0
+    levels, cdf = utilization_cdf(res)
+    return {
+        "fingerprint": task.fingerprint(),
+        "label": task.label,
+        "run_idx": task.run_idx,
+        "seed": task.seed,
+        "summary": summarize(res),
+        "cdf_levels": [float(x) for x in levels],
+        "cdf": [float(x) for x in cdf],
+        "sim_s": round(wall, 4),
+    }
+
+
+class EvalRunner:
+    """Fan tasks across a process pool, checkpointing each result.
+
+    ``workers=None`` uses ``os.cpu_count()``; ``workers <= 1`` runs
+    inline (no pool) — useful for tests and debugging. With
+    ``checkpoint_dir`` set, completed tasks are skipped on re-run when
+    their stored fingerprint matches the requested configuration;
+    mismatching or unreadable checkpoints are ignored and re-executed.
+    """
+
+    def __init__(self, checkpoint_dir: Optional[str] = None,
+                 workers: Optional[int] = None, emit=None):
+        self.checkpoint_dir = checkpoint_dir
+        self.workers = os.cpu_count() if workers is None else workers
+        self.emit = emit or (lambda *a: None)
+        self.last_stats: Dict = {}
+
+    # -- checkpoint store ---------------------------------------------
+    def _ckpt_path(self, task: EvalTask) -> Optional[str]:
+        if not self.checkpoint_dir:
+            return None
+        return os.path.join(self.checkpoint_dir, task.checkpoint_name())
+
+    def _load_checkpoint(self, task: EvalTask) -> Optional[Dict]:
+        path = self._ckpt_path(task)
+        if not path:
+            return None
+        if not os.path.exists(path):
+            # Same config may have been checkpointed under another
+            # label (fingerprints are label-independent).
+            hits = glob.glob(os.path.join(
+                self.checkpoint_dir,
+                f"*__r{task.run_idx}__{task.fingerprint()}.json"))
+            path = hits[0] if hits else None
+            if path is None:
+                return None
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if rec.get("fingerprint") != task.fingerprint():
+            return None
+        rec["label"] = task.label   # restamp: label is display-only
+        return rec
+
+    def _save_checkpoint(self, task: EvalTask, rec: Dict) -> None:
+        path = self._ckpt_path(task)
+        if not path:
+            return
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, path)   # atomic: a checkpoint is whole or absent
+
+    # -- execution -----------------------------------------------------
+    def run(self, tasks: Sequence[EvalTask]) -> List[Dict]:
+        """Run the matrix; returns records ordered like ``tasks``."""
+        t0 = time.perf_counter()
+        records: List[Optional[Dict]] = [None] * len(tasks)
+        pending: List[int] = []
+        for i, task in enumerate(tasks):
+            rec = self._load_checkpoint(task)
+            if rec is not None:
+                records[i] = rec
+            else:
+                pending.append(i)
+        reused = len(tasks) - len(pending)
+        if reused:
+            self.emit(f"# resume: {reused}/{len(tasks)} tasks "
+                      "from checkpoints")
+
+        if pending:
+            if self.workers and self.workers > 1:
+                self._run_pool(tasks, pending, records)
+            else:
+                for i in pending:
+                    records[i] = run_task(tasks[i])
+                    self._save_checkpoint(tasks[i], records[i])
+
+        self.last_stats = {
+            "tasks": len(tasks),
+            "reused_from_checkpoint": reused,
+            "executed": len(pending),
+            "workers": self.workers,
+            "wall_s": round(time.perf_counter() - t0, 3),
+            "sim_s_total": round(sum(r["sim_s"] for r in records
+                                     if r is not None), 3),
+        }
+        return [r for r in records if r is not None]
+
+    def _run_pool(self, tasks: Sequence[EvalTask], pending: List[int],
+                  records: List[Optional[Dict]]) -> None:
+        import multiprocessing as mp
+
+        # fork (Linux default) inherits sys.path, so workers resolve the
+        # repro package regardless of how the parent set PYTHONPATH.
+        ctx = (mp.get_context("fork")
+               if "fork" in mp.get_all_start_methods() else None)
+        done = 0
+        with ProcessPoolExecutor(max_workers=self.workers,
+                                 mp_context=ctx) as pool:
+            futs = {pool.submit(run_task, tasks[i]): i for i in pending}
+            remaining = set(futs)
+            while remaining:
+                finished, remaining = wait(remaining,
+                                           return_when=FIRST_COMPLETED)
+                for fut in finished:
+                    i = futs[fut]
+                    records[i] = fut.result()
+                    self._save_checkpoint(tasks[i], records[i])
+                    done += 1
+                    self.emit(f"# eval {done}/{len(pending)}: "
+                              f"{tasks[i].label} run {tasks[i].run_idx} "
+                              f"({records[i]['sim_s']:.1f}s)")

@@ -2,7 +2,7 @@
 oracle, and the Pallas kernel — all agree; tests sweep shapes."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

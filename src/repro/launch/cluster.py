@@ -17,11 +17,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_variant
 from repro.core.allocator import RFoldPolicy

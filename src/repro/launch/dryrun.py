@@ -23,12 +23,10 @@ import re
 import subprocess
 import sys
 import time
-import traceback
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.registry import ARCH_IDS
@@ -77,7 +75,6 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, Any]:
             continue
         lhs, _, rhs = line.partition("=")
         rhs = rhs.strip()
-        m = re.match(r"(\(?[^)]*\)?)\s*(%?[a-z0-9\-]+)", rhs)
         for op in COLLECTIVE_OPS:
             # match op name at the call position: "<type> opname("
             mm = re.match(r"(.+?)\s(%?" + op + r")[.\d]*\(", rhs)

@@ -13,7 +13,6 @@ before/after cycle is one CLI call.
 """
 import argparse
 import json
-import sys
 import time
 from typing import Any, Callable, Dict
 
@@ -190,8 +189,6 @@ def run_variant(arch: str, shape_name: str, variant: str,
 def _probe(cfg, rules, shape, multi_pod, depth):
     """dryrun._compile_cost with explicit rules (variant may change
     them)."""
-    import jax
-    from repro.parallel.sharding import logical_rules
     cfg_p = cfg.replace(n_layers=depth, force_unscanned=True)
     # Temporarily swap rules_for used by build_dryrun via the logical
     # rules the step function reads; build_dryrun computes its own rule

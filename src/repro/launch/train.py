@@ -11,10 +11,8 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_variant
 from repro.models import model as lm

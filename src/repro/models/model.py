@@ -223,13 +223,15 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jnp.ndarray,
             for li in range(seg.count):
                 st = st_seg[li] if st_seg is not None else None
                 if grouped:
-                    fn = lambda lp, h, st_: _apply_group(
-                        cfg, seg.group, lp, h, positions, st_, window,
-                        use_kernel, shared_attn=shared_for_seg)
+                    def fn(lp, h, st_):
+                        return _apply_group(
+                            cfg, seg.group, lp, h, positions, st_, window,
+                            use_kernel, shared_attn=shared_for_seg)
                 else:
-                    fn = lambda lp, h, st_: apply_layer(
-                        cfg, lp, h, positions, seg.kind, state=st_,
-                        window=window, use_kernel=use_kernel)
+                    def fn(lp, h, st_):
+                        return apply_layer(
+                            cfg, lp, h, positions, seg.kind, state=st_,
+                            window=window, use_kernel=use_kernel)
                 if cfg.remat == "full":
                     fn = jax.checkpoint(fn, prevent_cse=False)
                 x, ns, a = fn(sp[li], x, st)

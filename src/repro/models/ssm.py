@@ -6,7 +6,7 @@ selects the Pallas kernel or the jnp oracle).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ References: Beck et al., "xLSTM: Extended Long Short-Term Memory"
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,10 +16,11 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Sequence, Set, Tuple
 
-from repro.core.allocator import PlacementPolicy
+from repro.core.allocator import PlacementPolicy, shape_key
+from repro.core.geometry import Dims
 from .job import Job
 
 ARRIVAL, COMPLETION = 0, 1
@@ -63,10 +64,16 @@ class Simulator:
         # Event-driven drain watermark: a head job that failed to place
         # can only be unblocked by a COMPLETION (arrivals never free
         # capacity under FIFO), so arrival events behind a blocked head
-        # skip the placement retry entirely. ``gated=False`` restores
-        # the naive retry-on-every-event behaviour (parity oracle).
+        # skip the placement retry entirely. Backfill mode gets the
+        # per-shape analogue: a shape that failed to place stays
+        # infeasible until the next completion (placements only consume
+        # capacity, rotations share feasibility), so queued jobs whose
+        # canonical shape already failed skip the retry. ``gated=False``
+        # restores the naive retry-on-every-event behaviour (parity
+        # oracle).
         self.gated = gated
         self._head_blocked = False
+        self._infeasible_shapes: Set[Dims] = set()
         self.queue: List[Job] = []
         self.events: List[Tuple[float, int, int, Job]] = []
         self._seq = itertools.count()
@@ -98,11 +105,17 @@ class Simulator:
                 job.dropped = True
                 self.queue.pop(i)
                 continue
+            key = shape_key(job.shape)
+            if (self.gated and self.backfill
+                    and key in self._infeasible_shapes):
+                i += 1  # same shape already failed since the last free
+                continue
             placement = self.policy.try_place(job.job_id, job.shape)
             if placement is None:
                 if not self.backfill:
                     self._head_blocked = True
                     return  # head blocks
+                self._infeasible_shapes.add(key)
                 i += 1
                 continue
             self.queue.pop(i)
@@ -124,6 +137,9 @@ class Simulator:
                     continue
             else:
                 self.policy.release(job.job_id)
+                # Freed capacity may unblock any shape: reset the
+                # backfill feasibility watermark.
+                self._infeasible_shapes.clear()
             self._drain_queue(t)
             self._sample(t)
         return SimResult(self.jobs, self.util_samples,

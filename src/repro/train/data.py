@@ -6,7 +6,7 @@ arrays onto the mesh with the batch-axis NamedSharding.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
 """Loss + train step (forward, backward, AdamW), grad-accum option."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,11 +7,9 @@ from repro.core.allocator import (FirstFitPolicy, FoldingPolicy,
                                   RFoldPolicy, ReconfigPolicy, make_policy)
 from repro.core.geometry import JobShape
 from repro.sim.job import Job
-from repro.sim.metrics import (aggregate, jct_percentiles, summarize,
-                               time_weighted_utilization)
+from repro.sim.metrics import aggregate, time_weighted_utilization
 from repro.sim.simulator import Simulator
-from repro.traces.generator import TraceConfig, generate_trace, sample_shape
-
+from repro.traces.generator import TraceConfig, generate_trace
 
 # ---------------------------------------------------------------- policies
 def test_firstfit_rejects_oversized_dim():

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import all_configs, get_config, smoke_variant
 from repro.configs.registry import ARCH_IDS
-from repro.configs.shapes import SHAPES, concrete_batch, smoke_shape
+from repro.configs.shapes import concrete_batch, smoke_shape
 from repro.models import model as lm
 from repro.serve import engine
 from repro.train.optim import OptimConfig, init_opt_state

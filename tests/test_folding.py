@@ -1,10 +1,11 @@
 """Folding: constructions match the paper's examples; every emitted fold
 certifies as a ring-product embedding (property-based)."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.folding import (Fold, enumerate_folds, fold_links,
-                                ring_edges, verify_fold)
+from repro.core.folding import (enumerate_folds,
+    fold_links,
+    ring_edges,
+    verify_fold)
 from repro.core.geometry import JobShape, volume
 
 FULL_WRAP = (True, True, True)

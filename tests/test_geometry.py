@@ -1,5 +1,4 @@
 """Geometry: Hamiltonian cycles, factorizations, neighbor math."""
-import itertools
 
 import pytest
 from hypothesis import given, settings, strategies as st

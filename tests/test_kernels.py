@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps asserting allclose against
 the pure-jnp oracles (kernels run in interpret mode on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -13,7 +12,6 @@ from repro.kernels.flash_attention import kernel as fa_kernel
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.ssd_scan import kernel as ssd_kernel
 from repro.kernels.ssd_scan import ref as ssd_ref
-
 
 # ------------------------------------------------------------ flash attn
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -8,7 +8,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -55,8 +54,9 @@ def test_param_logical_axes_moe_no_duplicate():
                       "router": jnp.zeros((64, 160))},
               "attn": {"w_q": jnp.zeros((64, 64))}}
     axes = param_logical_axes(params, n_expert_hint=160)
-    is_leaf = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+    def is_leaf(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
     flat = jax.tree_util.tree_leaves(axes, is_leaf=is_leaf)
     for a in flat:
         resolved = [DEFAULT_RULES.get(n) if n else None for n in a]

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, smoke_variant
 from repro.models.attention import _cache_write, init_kv_cache
 from repro.models.common import (ModelConfig, apply_mrope, apply_rope,
                                  apply_norm, init_norm,

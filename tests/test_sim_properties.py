@@ -1,5 +1,4 @@
 """Hypothesis property tests on simulator + allocator invariants."""
-import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.allocator import make_policy
