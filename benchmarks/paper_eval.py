@@ -161,9 +161,9 @@ def main(argv=None) -> None:
                      if args.full else "BENCH_paper_eval.json")
     ckpt_dir = args.ckpt_dir or None
     if args.fresh and ckpt_dir and os.path.isdir(ckpt_dir):
-        for name in os.listdir(ckpt_dir):
-            if name.endswith(".json"):
-                os.remove(os.path.join(ckpt_dir, name))
+        from repro.eval.runner import iter_checkpoints
+        for path in iter_checkpoints(ckpt_dir):
+            os.remove(path)
 
     t0 = time.time()
     aggs, stats = _run_matrix(_configs_for(args.which), runs, n, args.load,

@@ -114,6 +114,31 @@ def paper_table(path: str) -> str:
     return "\n".join(out)
 
 
+def fitmask_table(path: str = "BENCH_fitmask.json") -> str:
+    """Multi-box kernel sweep: one VMEM pass for K boxes vs K
+    single-box pallas_calls (interpret mode), with the jitted CPU-jax
+    and numpy engines for scale."""
+    with open(path) as f:
+        bench = json.load(f)
+    lines = ["| grid | batch | K | multibox ms | single x K ms | "
+             "speedup | jax ms | numpy ms |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in bench.get("sweep", []):
+        lines.append(
+            f"| {r['grid']} | {r['batch']} | {r['k']} | "
+            f"{r['pallas_multibox_ms']:.1f} | "
+            f"{r['pallas_singlebox_x_k_ms']:.1f} | "
+            f"{r['multibox_speedup']}x | {r['jax_ms']:.2f} | "
+            f"{r['numpy_ms']:.2f} |")
+    head = bench.get("headline", {})
+    if head:
+        lines.append(
+            f"\nHeadline ({head.get('criterion')}): "
+            f"{head.get('min_speedup')}x-{head.get('max_speedup')}x, "
+            f"pass={head.get('pass')}")
+    return "\n".join(lines)
+
+
 def bench_table(alloc_path: str = "BENCH_allocator.json",
                 eval_path: str = "BENCH_paper_eval.json") -> str:
     """Perf trajectory: placement-engine rates (BENCH_allocator.json)
@@ -155,7 +180,8 @@ def bench_table(alloc_path: str = "BENCH_allocator.json",
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
-                    choices=["all", "dryrun", "roofline", "paper", "bench"])
+                    choices=["all", "dryrun", "roofline", "paper", "bench",
+                             "fitmask"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -171,6 +197,10 @@ def main() -> None:
     if args.which in ("all", "bench"):
         print("\n### Perf trajectory (BENCH_*.json)\n")
         print(bench_table())
+    if args.which in ("all", "fitmask") and \
+            os.path.exists("BENCH_fitmask.json"):
+        print("\n### Fitmask multi-box kernel (BENCH_fitmask.json)\n")
+        print(fitmask_table())
 
 
 if __name__ == "__main__":

@@ -23,10 +23,12 @@ def main() -> None:
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument("--skip-micro", action="store_true")
     ap.add_argument("--skip-alloc", action="store_true")
+    ap.add_argument("--skip-fitmask", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
-    from benchmarks import allocator_bench, kernels_bench, paper_eval, roofline
+    from benchmarks import (allocator_bench, fitmask_bench, kernels_bench,
+                            paper_eval, roofline)
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -48,6 +50,18 @@ def main() -> None:
         print("=" * 70)
         print("## Allocator / placement-engine benchmark")
         allocator_bench.main(["--out", "BENCH_allocator.json"])
+
+    if not args.skip_fitmask:
+        print("=" * 70)
+        print("## Fitmask engine benchmark (multi-box vs single-box)")
+        # The committed BENCH_fitmask.json is the full batch x K x grid
+        # sweep; CI-sized runs smoke the headline cell into experiments/
+        # so they don't clobber the tracked snapshot.
+        if args.full:
+            fitmask_bench.main(["--out", "BENCH_fitmask.json"])
+        else:
+            fitmask_bench.main(["--quick", "--out",
+                                "experiments/BENCH_fitmask_quick.json"])
 
     if not args.skip_micro:
         print("=" * 70)

@@ -96,9 +96,20 @@ class PlacementPolicy:
 # ----------------------------------------------------------------------
 
 class _StaticBase(PlacementPolicy):
-    def __init__(self, dims: Dims = (16, 16, 16)):
+    def __init__(self, dims: Dims = (16, 16, 16),
+                 fitmask_engine: Optional[str] = None):
         super().__init__()
-        self.torus = StaticTorus(dims)
+        self.torus = StaticTorus(dims, fitmask_engine=fitmask_engine)
+
+    def _candidate_boxes(self, folds) -> List[Dims]:
+        """Distinct in-bounds fold boxes — one allocator step's fit-mask
+        query set, declared up front so an accelerator fitmask engine
+        answers them all in a single multi-box VMEM pass."""
+        seen = set()
+        for fold in folds:
+            if all(b <= d for b, d in zip(fold.box, self.torus.dims)):
+                seen.add(fold.box)
+        return sorted(seen)
 
     @property
     def num_xpus(self) -> int:
@@ -150,13 +161,16 @@ class FirstFitPolicy(_StaticBase):
     name = "firstfit"
 
     def empty_clone(self) -> "FirstFitPolicy":
-        return FirstFitPolicy(self.torus.dims)
+        return FirstFitPolicy(self.torus.dims,
+                              fitmask_engine=self.torus.fitmask_engine)
 
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
-        for fold in enumerate_folds(shape, max_dim=max(self.torus.dims),
-                                    include_identity=True):
-            if fold.kind != "identity":
-                continue
+        folds = [f for f in enumerate_folds(shape,
+                                            max_dim=max(self.torus.dims),
+                                            include_identity=True)
+                 if f.kind == "identity"]
+        self.torus.prefetch_boxes(self._candidate_boxes(folds))
+        for fold in folds:
             if any(b > d for b, d in zip(fold.box, self.torus.dims)):
                 continue
             origin = self.torus.find_free_box(fold.box)
@@ -177,11 +191,14 @@ class FoldingPolicy(_StaticBase):
     name = "folding"
 
     def empty_clone(self) -> "FoldingPolicy":
-        return FoldingPolicy(self.torus.dims)
+        return FoldingPolicy(self.torus.dims,
+                             fitmask_engine=self.torus.fitmask_engine)
 
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
         candidates = []
-        for fold in enumerate_folds(shape, max_dim=max(self.torus.dims)):
+        folds = list(enumerate_folds(shape, max_dim=max(self.torus.dims)))
+        self.torus.prefetch_boxes(self._candidate_boxes(folds))
+        for fold in folds:
             if any(b > d for b, d in zip(fold.box, self.torus.dims)):
                 continue
             origin = self.torus.find_free_box(fold.box)
@@ -206,10 +223,12 @@ class FoldingPolicy(_StaticBase):
 
 class _ReconfigBase(PlacementPolicy):
     def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
-                 dedicate_chained: bool = False):
+                 dedicate_chained: bool = False,
+                 fitmask_engine: Optional[str] = None):
         super().__init__()
         self.cluster = ReconfigTorus(num_xpus, cube_n,
-                                     dedicate_chained=dedicate_chained)
+                                     dedicate_chained=dedicate_chained,
+                                     fitmask_engine=fitmask_engine)
 
     @property
     def num_xpus(self) -> int:
@@ -334,7 +353,8 @@ class ReconfigPolicy(_ReconfigBase):
 
     def empty_clone(self) -> "ReconfigPolicy":
         return ReconfigPolicy(self.cluster.num_xpus, self.cluster.cube_n,
-                              dedicate_chained=self.cluster.dedicate_chained)
+                              dedicate_chained=self.cluster.dedicate_chained,
+                              fitmask_engine=self.cluster.fitmask_engine)
 
     def _folds(self, shape: JobShape) -> List[Fold]:
         return self._dedupe_rotations([
@@ -350,7 +370,8 @@ class RFoldPolicy(_ReconfigBase):
 
     def empty_clone(self) -> "RFoldPolicy":
         return RFoldPolicy(self.cluster.num_xpus, self.cluster.cube_n,
-                           dedicate_chained=self.cluster.dedicate_chained)
+                           dedicate_chained=self.cluster.dedicate_chained,
+                           fitmask_engine=self.cluster.fitmask_engine)
 
     def _folds(self, shape: JobShape) -> List[Fold]:
         return self._dedupe_rotations(
@@ -369,16 +390,19 @@ class RFoldBestEffortPolicy(RFoldPolicy):
 
     def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
                  dedicate_chained: bool = False,
-                 scatter_slowdown: float = 1.5):
+                 scatter_slowdown: float = 1.5,
+                 fitmask_engine: Optional[str] = None):
         super().__init__(num_xpus, cube_n,
-                         dedicate_chained=dedicate_chained)
+                         dedicate_chained=dedicate_chained,
+                         fitmask_engine=fitmask_engine)
         self.scatter_slowdown = scatter_slowdown
 
     def empty_clone(self) -> "RFoldBestEffortPolicy":
         return RFoldBestEffortPolicy(
             self.cluster.num_xpus, self.cluster.cube_n,
             dedicate_chained=self.cluster.dedicate_chained,
-            scatter_slowdown=self.scatter_slowdown)
+            scatter_slowdown=self.scatter_slowdown,
+            fitmask_engine=self.cluster.fitmask_engine)
 
     def _can_ever_place(self, shape: JobShape) -> bool:
         if super()._can_ever_place(shape):

@@ -14,7 +14,7 @@ Engine selection:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,6 +102,28 @@ def fit_mask_batched(occ: np.ndarray, box: Dims) -> np.ndarray:
     """Batched fit mask: (B, X, Y, Z) -> bool (B, X-a+1, Y-b+1, Z-c+1)
     via one shared batched integral image (no per-grid python loop)."""
     return window_sums_from_ii(integral_image(occ), box) == 0
+
+
+def fit_mask_multi(occ: np.ndarray, boxes: Sequence[Dims]) -> np.ndarray:
+    """All K candidate boxes from one shared batched integral image:
+    (B, X, Y, Z) x K boxes -> (B, K, X, Y, Z) int32, each plane padded
+    to the full grid (0 where the box overhangs or does not fit at
+    all). The numpy counterpart — and parity oracle — of the Pallas
+    multi-box kernel (``repro.kernels.fitmask.kernel.fitmask_multibox``).
+    """
+    occ = np.asarray(occ)
+    bsz = occ.shape[0]
+    X, Y, Z = occ.shape[-3:]
+    out = np.zeros((bsz, len(boxes), X, Y, Z), dtype=np.int32)
+    if not boxes:
+        return out
+    ii = integral_image(occ)
+    for k, box in enumerate(boxes):
+        s = window_sums_from_ii(ii, box)
+        if s.size:
+            a, b, c = box
+            out[:, k, :X - a + 1, :Y - b + 1, :Z - c + 1] = s == 0
+    return out
 
 
 def first_fit_origin(occ: np.ndarray, box: Dims) -> Optional[Coord]:

@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import fitmask
+from . import torus as _torus
 from .folding import Fold, WrapFlags, verify_fold
 from .geometry import Coord, Dims, volume
 
@@ -128,9 +129,14 @@ class ReconfigTorus:
     """Occupancy + placement over ``num_cubes`` reconfigurable cubes."""
 
     def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
-                 dedicate_chained: bool = False):
+                 dedicate_chained: bool = False,
+                 fitmask_engine: Optional[str] = None):
         if num_xpus % (cube_n ** 3):
             raise ValueError("num_xpus must be a multiple of cube volume")
+        # Free-block search backend (repro.kernels.fitmask.ops registry).
+        # None defers to REPRO_FITMASK_ENGINE / the registry default;
+        # "numpy" keeps the pure-host path below.
+        self.fitmask_engine = fitmask_engine
         # If True, a cube chained into a multi-cube job is exclusively
         # owned by it (strands leftover XPUs). Default False: the OCS is
         # per-face-position, so leftover sub-blocks stay usable — this
@@ -159,6 +165,11 @@ class ReconfigTorus:
         self._order_key: Optional[np.ndarray] = None    # best-fit sort key
         self._block_masks: Dict[Slice3, np.ndarray] = {}
         self._sorted_cands: Dict[Tuple[Slice3, bool], np.ndarray] = {}
+        # Engine path: piece shapes ever queried (stable after the first
+        # few placements) and their per-epoch all-cube fit masks, filled
+        # by one multi-box pass over the whole cube batch.
+        self._seen_shapes: set = set()
+        self._shape_masks: Dict[Dims, np.ndarray] = {}
 
     # ------------------------------------------------------------------
     def bump_epoch(self) -> None:
@@ -183,6 +194,7 @@ class ReconfigTorus:
         self._order_key = self._free_cnt * 2 + self._cube_empty
         self._block_masks = {}
         self._sorted_cands = {}
+        self._shape_masks = {}
         self._cache_epoch = self._epoch
 
     # ------------------------------------------------------------------
@@ -229,12 +241,28 @@ class ReconfigTorus:
 
     def _block_free_mask(self, local: Slice3) -> np.ndarray:
         """Bool mask over cubes: sub-block ``local`` entirely free.
-        Answered from the per-epoch batched integral image and memoized
+        Answered from the per-epoch batched integral image (numpy) or
+        from the engine's per-epoch multi-box fit masks, and memoized
         per local slice (every fold/offset in a step reuses it)."""
         self._derived()
         m = self._block_masks.get(local)
         if m is None:
-            m = fitmask.block_free_from_ii(self._ii, local)
+            engine = _torus.resolve_fitmask_engine(self.fitmask_engine)
+            if engine is None:
+                m = fitmask.block_free_from_ii(self._ii, local)
+            else:
+                shape = tuple(hi - lo for lo, hi in local)
+                origin = tuple(lo for lo, _ in local)
+                masks = self._shape_masks
+                if shape not in masks:
+                    # One multi-box pass answers every piece shape seen
+                    # so far for ALL cubes of this epoch.
+                    self._seen_shapes.add(shape)
+                    shapes = sorted(self._seen_shapes)
+                    out = np.asarray(engine.multibox(self.occ, shapes))
+                    masks = self._shape_masks = {
+                        s: out[:, k] != 0 for k, s in enumerate(shapes)}
+                m = masks[shape][(slice(None),) + origin]
             self._block_masks[local] = m
         return m
 

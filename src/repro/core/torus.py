@@ -43,12 +43,31 @@ class Allocation:
         return len(self.coords)
 
 
+def resolve_fitmask_engine(name: Optional[str]):
+    """Resolve a fitmask engine selection for the placement hot path:
+    ``None`` defers to the registry default (``REPRO_FITMASK_ENGINE``
+    env var / ``set_default_engine``). Returns ``None`` for ``numpy`` —
+    the builtin host integral-image fast path, which must stay free of
+    jax imports — and the engine object otherwise."""
+    from repro.kernels.fitmask import ops  # numpy-only at import time
+    name = name or ops.default_engine_name()
+    if name == "numpy":
+        return None
+    return ops.get_engine(name)
+
+
 class StaticTorus:
     """A D1×D2×D3 torus with full wrap-around on every axis whose size
-    equals the torus dimension. Occupancy is a numpy bool grid."""
+    equals the torus dimension. Occupancy is a numpy bool grid.
 
-    def __init__(self, dims: Dims):
+    ``fitmask_engine`` selects the free-box search backend (see
+    ``repro.kernels.fitmask.ops``): the default ``numpy`` engine keeps
+    the host integral-image path; accelerator engines answer all
+    candidate boxes of an epoch in one multi-box pass."""
+
+    def __init__(self, dims: Dims, fitmask_engine: Optional[str] = None):
         self.dims: Dims = tuple(int(d) for d in dims)  # type: ignore[assignment]
+        self.fitmask_engine = fitmask_engine
         self.occ = np.zeros(self.dims, dtype=bool)
         self.owner = np.full(self.dims, -1, dtype=np.int64)
         self.link_owner: Dict[Link, int] = {}
@@ -64,6 +83,11 @@ class StaticTorus:
         self._fit_ii: Optional[np.ndarray] = None
         self._fit_origin: Dict[Dims, Optional[Coord]] = {}
         self._fit_count: Dict[Dims, int] = {}
+        # Engine path: candidate boxes ever queried (the fold-box set
+        # stabilizes after the first few jobs), and their per-epoch
+        # full-grid fit masks — all filled by ONE multi-box pass.
+        self._seen_boxes: set = set()
+        self._box_masks: Dict[Dims, np.ndarray] = {}
 
     # ------------------------------------------------------------------
     def bump_epoch(self) -> None:
@@ -72,14 +96,58 @@ class StaticTorus:
         self._epoch += 1
         self._busy = int(self.occ.sum())
 
-    def _fit_state(self):
-        from . import fitmask
+    def _fit_state(self) -> None:
+        """Roll the per-epoch caches. The host integral image itself is
+        built lazily (:meth:`_host_ii`) so accelerator-engine runs never
+        pay for a cumsum they won't read."""
         if self._fit_epoch != self._epoch:
-            self._fit_ii = fitmask.integral_image(self.occ)
+            self._fit_ii = None
             self._fit_origin = {}
             self._fit_count = {}
+            self._box_masks = {}
             self._fit_epoch = self._epoch
+
+    def _host_ii(self) -> np.ndarray:
+        from . import fitmask
+        if self._fit_ii is None:
+            self._fit_ii = fitmask.integral_image(self.occ)
         return self._fit_ii
+
+    def _fit_mask_for(self, box: Dims) -> np.ndarray:
+        """Full-grid bool fit mask for one box at the current epoch.
+        With an accelerator engine, every box seen so far is answered
+        by a single multi-box pass per epoch (one VMEM integral image
+        shared across the whole candidate set); the numpy path extracts
+        windows from the shared host integral image."""
+        engine = resolve_fitmask_engine(self.fitmask_engine)
+        if engine is None:
+            from . import fitmask
+            m = np.zeros(self.dims, dtype=bool)
+            s = fitmask.window_sums_from_ii(self._host_ii(), box)
+            if s.size:
+                m[:s.shape[0], :s.shape[1], :s.shape[2]] = s == 0
+            return m
+        self._fit_state()  # epoch roll also resets _box_masks
+        if box not in self._box_masks:
+            self._seen_boxes.add(box)
+            boxes = sorted(self._seen_boxes)
+            out = np.asarray(engine.multibox(self.occ[None], boxes))[0]
+            self._box_masks = {b: out[k] != 0 for k, b in enumerate(boxes)}
+        return self._box_masks[box]
+
+    def prefetch_boxes(self, boxes) -> None:
+        """Declare an allocator step's candidate boxes up front so an
+        accelerator engine answers them all in one multi-box pass. The
+        numpy path is already amortized by the shared integral image,
+        so this is a no-op there."""
+        if resolve_fitmask_engine(self.fitmask_engine) is None:
+            return
+        self._fit_state()
+        fresh = [tuple(int(v) for v in b) for b in boxes]
+        if any(b not in self._box_masks for b in fresh):
+            self._seen_boxes.update(fresh)
+            self._box_masks = {}          # recompute the union in one pass
+            self._fit_mask_for(fresh[0])
 
     # ------------------------------------------------------------------
     @property
@@ -114,11 +182,10 @@ class StaticTorus:
         free XPUs exists, or None. All queries at one occupancy epoch
         share a single integral image; repeated boxes are memoized."""
         box = tuple(int(b) for b in box)
-        ii = self._fit_state()
+        self._fit_state()
         if box not in self._fit_origin:
-            from . import fitmask
-            m = fitmask.window_sums_from_ii(ii, box) == 0
-            if m.size == 0 or not m.any():
+            m = self._fit_mask_for(box)
+            if not m.any():
                 self._fit_origin[box] = None
             else:
                 flat = int(np.argmax(m))  # first True in C order
@@ -128,11 +195,9 @@ class StaticTorus:
 
     def count_free_boxes(self, box: Dims) -> int:
         box = tuple(int(b) for b in box)
-        ii = self._fit_state()
+        self._fit_state()
         if box not in self._fit_count:
-            from . import fitmask
-            m = fitmask.window_sums_from_ii(ii, box) == 0
-            self._fit_count[box] = int(m.sum())
+            self._fit_count[box] = int(self._fit_mask_for(box).sum())
         return self._fit_count[box]
 
     # ------------------------------------------------------------------

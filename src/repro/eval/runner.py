@@ -7,6 +7,13 @@ JSON file, keyed by a fingerprint of the task's full configuration, so
 an interrupted sweep resumes from the completed subset instead of
 restarting.
 
+Checkpoint layout: files are bucketed into fingerprint-prefix
+subdirectories (``<dir>/<fp[:2]>/<name>.json``, 256 shards) so
+10k+-task parameter scans never put every file in one flat directory.
+Resume stays backward-compatible with flat stores: lookups fall back
+to the un-sharded path, so a pre-shard checkpoint dir keeps resuming
+(new writes land sharded).
+
 Determinism contract: the per-run seed depends only on ``(seed0,
 run_idx)`` — never on the worker count, the executor schedule, or which
 checkpoints already exist — so pool runs, serial runs and resumed runs
@@ -65,6 +72,22 @@ class EvalTask:
     def checkpoint_name(self) -> str:
         slug = re.sub(r"[^A-Za-z0-9]+", "_", self.label).strip("_").lower()
         return f"{slug}__r{self.run_idx}__{self.fingerprint()}.json"
+
+
+SHARD_CHARS = 2   # 16^2 = 256 buckets; plenty below any fs dir limit
+
+
+def shard_dir(checkpoint_dir: str, fingerprint: str) -> str:
+    """Fingerprint-prefix bucket for one checkpoint."""
+    return os.path.join(checkpoint_dir, fingerprint[:SHARD_CHARS])
+
+
+def iter_checkpoints(checkpoint_dir: str):
+    """All checkpoint JSON paths in a store, sharded or legacy-flat."""
+    for root, _dirs, files in os.walk(checkpoint_dir):
+        for name in files:
+            if name.endswith(".json"):
+                yield os.path.join(root, name)
 
 
 def make_tasks(configs: Sequence[Tuple[str, str, dict]], runs: int,
@@ -135,18 +158,28 @@ class EvalRunner:
     def _ckpt_path(self, task: EvalTask) -> Optional[str]:
         if not self.checkpoint_dir:
             return None
-        return os.path.join(self.checkpoint_dir, task.checkpoint_name())
+        return os.path.join(shard_dir(self.checkpoint_dir,
+                                      task.fingerprint()),
+                            task.checkpoint_name())
 
     def _load_checkpoint(self, task: EvalTask) -> Optional[Dict]:
-        path = self._ckpt_path(task)
-        if not path:
+        if not self.checkpoint_dir:
             return None
-        if not os.path.exists(path):
+        fp = task.fingerprint()
+        shard = shard_dir(self.checkpoint_dir, fp)
+        # Sharded location first, then the legacy flat layout (stores
+        # written before sharding keep resuming).
+        path = next((p for p in (
+            os.path.join(shard, task.checkpoint_name()),
+            os.path.join(self.checkpoint_dir, task.checkpoint_name()))
+            if os.path.exists(p)), None)
+        if path is None:
             # Same config may have been checkpointed under another
             # label (fingerprints are label-independent).
-            hits = glob.glob(os.path.join(
-                self.checkpoint_dir,
-                f"*__r{task.run_idx}__{task.fingerprint()}.json"))
+            pattern = f"*__r{task.run_idx}__{fp}.json"
+            hits = (glob.glob(os.path.join(shard, pattern))
+                    or glob.glob(os.path.join(self.checkpoint_dir,
+                                              pattern)))
             path = hits[0] if hits else None
             if path is None:
                 return None
@@ -164,7 +197,7 @@ class EvalRunner:
         path = self._ckpt_path(task)
         if not path:
             return
-        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(rec, f)

@@ -1,36 +1,250 @@
-"""Public wrapper for fitmask: numpy engine (sim hot path), reduce_window
-oracle, and the Pallas kernel — all agree; tests sweep shapes."""
+"""Pluggable fitmask engine layer.
+
+Every placement policy reduces to the same primitive — "for each origin
+of each grid, does box k fit in free space?" — so the engines live
+behind one registry and the allocator picks at runtime:
+
+  * ``numpy``  — batched integral-image window sums on the host
+    (`repro.core.fitmask`). The simulator's default and the parity
+    oracle for everything else. **Pure numpy**: no jax call, no device
+    round-trip (tested).
+  * ``jax``    — the same algorithm as jitted XLA ops; the CPU/GPU
+    accelerator path and the apples-to-apples baseline for the kernel.
+  * ``pallas`` — the Pallas TPU kernel: one VMEM integral-image pass
+    per grid answering all K candidate boxes
+    (`kernel.fitmask_multibox`); interpret mode off-TPU.
+  * ``ref``    — `jax.lax.reduce_window` oracle.
+
+Selection: an explicit ``engine=`` argument wins, then
+:func:`set_default_engine`, then the ``REPRO_FITMASK_ENGINE``
+environment variable, then ``numpy``. All engines share the contract
+``multibox(occ, boxes) -> (B, K, X, Y, Z) int32`` with every plane
+padded to the full grid (0 where the box overhangs or cannot fit), so
+callers never special-case engine, K, or infeasible boxes.
+"""
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+import os
+from typing import Dict, Optional, Sequence, Tuple, Type
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fitmask as np_engine
-from . import kernel as _kernel
-from . import ref as _ref
+
+Box = Tuple[int, int, int]
+
+ENGINE_ENV = "REPRO_FITMASK_ENGINE"
+_default_engine: Optional[str] = None
 
 
-def fitmask(occ, box: Tuple[int, int, int], engine: str = "auto"):
-    """occ: (B, X, Y, Z) or (X, Y, Z). Returns int32 fit mask of the
-    same (batched) shape."""
+def _canon_boxes(boxes: Sequence[Box]) -> Tuple[Box, ...]:
+    return tuple(tuple(int(v) for v in b) for b in boxes)  # type: ignore
+
+
+class FitmaskEngine:
+    """One fitmask backend. Subclasses implement :meth:`multibox`;
+    :meth:`fitmask` is the single-box convenience on top of it."""
+
+    name = "base"
+
+    def multibox(self, occ, boxes: Sequence[Box]):
+        """(B, X, Y, Z) x K boxes -> (B, K, X, Y, Z) int32."""
+        raise NotImplementedError
+
+    def fitmask(self, occ, box: Box):
+        """(B, X, Y, Z) -> (B, X, Y, Z) int32 for one box."""
+        return self.multibox(occ, (box,))[:, 0]
+
+
+class NumpyEngine(FitmaskEngine):
+    """Host integral-image engine — the sim hot path and the oracle.
+    Deliberately references no jax symbol: results stay numpy unless
+    the caller converts (regression-tested)."""
+
+    name = "numpy"
+
+    def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
+        return np_engine.fit_mask_multi(np.asarray(occ),
+                                        _canon_boxes(boxes))
+
+
+class JaxEngine(FitmaskEngine):
+    """Jitted XLA ops (no Pallas): the shared-integral-image algorithm,
+    batched over grids. The integral image jits once per grid shape and
+    each distinct box jits one small window-extraction program — so
+    when the allocator's candidate set grows by a box, only that box
+    compiles (a single K-static program would recompile the whole,
+    ever-larger, unrolled loop on every growth)."""
+
+    name = "jax"
+
+    @staticmethod
+    @functools.cache
+    def _ii_fn():
+        import jax
+        import jax.numpy as jnp
+
+        def ii(occ):
+            acc = jnp.pad(occ.astype(jnp.int32),
+                          ((0, 0), (1, 0), (1, 0), (1, 0)))
+            for ax in (1, 2, 3):
+                acc = jnp.cumsum(acc, axis=ax)
+            return acc
+
+        return jax.jit(ii)
+
+    @staticmethod
+    @functools.cache
+    def _window_fn(box: Box):
+        import jax
+        import jax.numpy as jnp
+        from .kernel import _window_fits
+        a, b, c = box
+
+        def window(ii):
+            bsz = ii.shape[0]
+            x, y, z = (d - 1 for d in ii.shape[1:])
+            if a > x or b > y or c > z:
+                return jnp.zeros((bsz, x, y, z), jnp.int32)
+            fits = _window_fits(ii, box)
+            out = jnp.zeros((bsz, x, y, z), jnp.int32)
+            return jax.lax.dynamic_update_slice(out, fits, (0, 0, 0, 0))
+
+        return jax.jit(window)
+
+    def multibox(self, occ, boxes: Sequence[Box]):
+        import jax.numpy as jnp
+        boxes = _canon_boxes(boxes)
+        occ = jnp.asarray(occ)
+        if not boxes:
+            bsz, x, y, z = occ.shape
+            return jnp.zeros((bsz, 0, x, y, z), jnp.int32)
+        ii = self._ii_fn()(occ)
+        return jnp.stack([self._window_fn(b)(ii) for b in boxes], axis=1)
+
+
+class PallasEngine(FitmaskEngine):
+    """The multi-box Pallas kernel: one VMEM pass for all K boxes,
+    compiled on TPU, interpret mode elsewhere."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        self._interpret = interpret
+
+    def _interp(self) -> bool:
+        if self._interpret is not None:
+            return self._interpret
+        import jax
+        return jax.default_backend() != "tpu"
+
+    def multibox(self, occ, boxes: Sequence[Box]):
+        import jax.numpy as jnp
+        from . import kernel as _kernel
+        return _kernel.fitmask_multibox(jnp.asarray(occ),
+                                        _canon_boxes(boxes),
+                                        interpret=self._interp())
+
+    def fitmask(self, occ, box: Box):
+        import jax.numpy as jnp
+        from . import kernel as _kernel
+        return _kernel.fitmask_batched(jnp.asarray(occ),
+                                       tuple(int(v) for v in box),
+                                       interpret=self._interp())
+
+
+class RefEngine(FitmaskEngine):
+    """reduce_window oracle (jax, unjitted per box)."""
+
+    name = "ref"
+
+    def multibox(self, occ, boxes: Sequence[Box]):
+        import jax.numpy as jnp
+        from . import ref as _ref
+        occ = jnp.asarray(occ)
+        boxes = _canon_boxes(boxes)
+        if not boxes:
+            bsz, x, y, z = occ.shape
+            return jnp.zeros((bsz, 0, x, y, z), jnp.int32)
+        return jnp.stack([_ref.fitmask_reference(occ, b) for b in boxes],
+                         axis=1)
+
+
+_REGISTRY: Dict[str, Type[FitmaskEngine]] = {}
+_INSTANCES: Dict[str, FitmaskEngine] = {}
+# Back-compat spellings from the pre-registry wrapper.
+_ALIASES = {"auto": "pallas", "kernel": "pallas"}
+
+
+def register_engine(cls: Type[FitmaskEngine]) -> Type[FitmaskEngine]:
+    _REGISTRY[cls.name] = cls
+    _INSTANCES.pop(cls.name, None)
+    return cls
+
+
+for _cls in (NumpyEngine, JaxEngine, PallasEngine, RefEngine):
+    register_engine(_cls)
+
+
+def available_engines() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def set_default_engine(name: Optional[str]) -> None:
+    """Process-wide default (overrides the env var); None resets to
+    env-var/``numpy`` resolution."""
+    if name is not None:
+        name = _ALIASES.get(name, name)
+        if name not in _REGISTRY:
+            raise KeyError(f"unknown fitmask engine {name!r}; "
+                           f"have {available_engines()}")
+    global _default_engine
+    _default_engine = name
+
+
+def default_engine_name() -> str:
+    if _default_engine is not None:
+        return _default_engine
+    env = os.environ.get(ENGINE_ENV, "").strip()
+    if env:
+        name = _ALIASES.get(env, env)
+        if name not in _REGISTRY:
+            raise KeyError(f"{ENGINE_ENV}={env!r} names no engine; "
+                           f"have {available_engines()}")
+        return name
+    return "numpy"
+
+
+def get_engine(name: Optional[str] = None) -> FitmaskEngine:
+    name = _ALIASES.get(name, name) if name else default_engine_name()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown fitmask engine {name!r}; "
+                       f"have {available_engines()}")
+    inst = _INSTANCES.get(name)
+    if inst is None:
+        inst = _INSTANCES[name] = _REGISTRY[name]()
+    return inst
+
+
+def fitmask(occ, box: Box, engine: Optional[str] = None):
+    """occ: (B, X, Y, Z) or (X, Y, Z). Returns the int32 fit mask of
+    the same (batched) shape. ``engine=None`` follows the registry's
+    selection order (set_default_engine > env var > numpy). The numpy
+    engine returns a numpy array — no device round-trip; callers that
+    want a jax array either convert or pick a jax-backed engine."""
     squeeze = occ.ndim == 3
     if squeeze:
         occ = occ[None]
-    if engine == "numpy":
-        # One shared batched integral image for the whole batch (no
-        # per-grid python loop) — same trick the allocator hot path uses.
-        out = np_engine.fit_mask_batched(np.asarray(occ), box).astype(np.int32)
-        x, y, z = occ.shape[1:]
-        pad = [(0, 0), (0, x - out.shape[1]), (0, y - out.shape[2]),
-               (0, z - out.shape[3])]
-        out = jnp.asarray(np.pad(out, pad))
-    elif engine == "ref":
-        out = _ref.fitmask_reference(jnp.asarray(occ), box)
-    else:
-        on_tpu = jax.default_backend() == "tpu"
-        out = _kernel.fitmask_batched(jnp.asarray(occ), box,
-                                      interpret=not on_tpu)
+    out = get_engine(engine).fitmask(occ, box)
+    return out[0] if squeeze else out
+
+
+def fitmask_multi(occ, boxes: Sequence[Box], engine: Optional[str] = None):
+    """All K candidate boxes in one engine pass: (B, X, Y, Z) or
+    (X, Y, Z) -> (B, K, X, Y, Z) / (K, X, Y, Z) int32."""
+    squeeze = occ.ndim == 3
+    if squeeze:
+        occ = occ[None]
+    out = get_engine(engine).multibox(occ, boxes)
     return out[0] if squeeze else out

@@ -8,6 +8,7 @@ import pytest
 
 from repro.eval import (EvalRunner, EvalTask, aggregate_by_label,
                         derive_seed, make_tasks, run_task, table1)
+from repro.eval.runner import SHARD_CHARS, iter_checkpoints, shard_dir
 
 # Small matrix: 512-XPU cluster, short traces — seconds, not minutes.
 CONFIGS = [
@@ -61,10 +62,10 @@ def test_resume_from_partial_checkpoint_equals_fresh(tmp_path):
     # populate checkpoints, then delete half of them
     runner = EvalRunner(checkpoint_dir=ckpt, workers=0)
     runner.run(_tasks())
-    files = sorted(os.listdir(ckpt))
+    files = sorted(iter_checkpoints(ckpt))
     assert len(files) == len(_tasks())
-    for name in files[::2]:
-        os.remove(os.path.join(ckpt, name))
+    for path in files[::2]:
+        os.remove(path)
 
     resumed_runner = EvalRunner(checkpoint_dir=ckpt, workers=0)
     resumed = resumed_runner.run(_tasks())
@@ -96,7 +97,8 @@ def test_corrupt_checkpoint_is_rerun(tmp_path):
     ckpt = str(tmp_path / "ckpt")
     tasks = _tasks(runs=1)
     EvalRunner(checkpoint_dir=ckpt, workers=0).run(tasks)
-    victim = os.path.join(ckpt, tasks[0].checkpoint_name())
+    victim = os.path.join(shard_dir(ckpt, tasks[0].fingerprint()),
+                          tasks[0].checkpoint_name())
     with open(victim, "w") as f:
         f.write("{not json")
     runner = EvalRunner(checkpoint_dir=ckpt, workers=0)
@@ -110,8 +112,61 @@ def test_pool_writes_checkpoints(tmp_path):
     ckpt = str(tmp_path / "ckpt")
     runner = EvalRunner(checkpoint_dir=ckpt, workers=2)
     runner.run(_tasks(runs=1))
-    assert sorted(os.listdir(ckpt)) == sorted(
-        t.checkpoint_name() for t in _tasks(runs=1))
+    assert sorted(os.path.basename(p) for p in iter_checkpoints(ckpt)) \
+        == sorted(t.checkpoint_name() for t in _tasks(runs=1))
+
+
+# ----------------------------------------------------- sharded store
+def test_checkpoints_land_in_fingerprint_shards(tmp_path):
+    """Every checkpoint is bucketed under its fingerprint prefix — no
+    file sits in the flat root (10k-task sweeps must not pile up in
+    one directory)."""
+    ckpt = str(tmp_path / "ckpt")
+    tasks = _tasks(runs=2)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(tasks)
+    assert not [n for n in os.listdir(ckpt)
+                if os.path.isfile(os.path.join(ckpt, n))]
+    for t in tasks:
+        path = os.path.join(shard_dir(ckpt, t.fingerprint()),
+                            t.checkpoint_name())
+        assert os.path.exists(path), path
+        rel = os.path.relpath(path, ckpt)
+        assert rel.split(os.sep)[0] == t.fingerprint()[:SHARD_CHARS]
+
+
+def test_resume_from_legacy_flat_store(tmp_path):
+    """A pre-shard (flat) checkpoint dir keeps resuming: every record
+    is reused, nothing re-executes."""
+    ckpt = str(tmp_path / "ckpt")
+    tasks = _tasks(runs=1)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(tasks)
+    # flatten the store the way the pre-shard runner laid it out
+    for path in list(iter_checkpoints(ckpt)):
+        os.replace(path, os.path.join(ckpt, os.path.basename(path)))
+    for name in os.listdir(ckpt):
+        sub = os.path.join(ckpt, name)
+        if os.path.isdir(sub):
+            os.rmdir(sub)
+    runner = EvalRunner(checkpoint_dir=ckpt, workers=0)
+    runner.run(tasks)
+    assert runner.last_stats["reused_from_checkpoint"] == len(tasks)
+    assert runner.last_stats["executed"] == 0
+
+
+def test_flat_store_cross_label_reuse(tmp_path):
+    """The label-independent fingerprint glob also finds legacy flat
+    checkpoints written under a different label."""
+    ckpt = str(tmp_path / "ckpt")
+    t1 = make_tasks([CONFIGS[0]], runs=1, num_jobs=20, load=1.5, seed0=100)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(t1)
+    for path in list(iter_checkpoints(ckpt)):
+        os.replace(path, os.path.join(ckpt, os.path.basename(path)))
+    relabeled = [("RFold renamed",) + CONFIGS[0][1:]]
+    t2 = make_tasks(relabeled, runs=1, num_jobs=20, load=1.5, seed0=100)
+    runner = EvalRunner(checkpoint_dir=ckpt, workers=0)
+    records = runner.run(t2)
+    assert runner.last_stats["reused_from_checkpoint"] == 1
+    assert records[0]["label"] == "RFold renamed"
 
 
 # ----------------------------------------------------- task semantics
