@@ -54,8 +54,10 @@ def _configs_for(which: str):
 
 
 def _run_matrix(configs, runs: int, num_jobs: int, load: float,
-                seed0: int, workers, ckpt_dir, emit=print):
-    tasks = make_tasks(configs, runs, num_jobs, load, seed0)
+                seed0: int, workers, ckpt_dir, emit=print,
+                trace_kw: Dict = None):
+    tasks = make_tasks(configs, runs, num_jobs, load, seed0,
+                       trace_kw=trace_kw)
     runner = EvalRunner(checkpoint_dir=ckpt_dir, workers=workers, emit=emit)
     records = runner.run(tasks)
     return aggregate_by_label(records), runner.last_stats
@@ -153,7 +155,18 @@ def main(argv=None) -> None:
                          "clobber the committed CI-sized snapshot)")
     ap.add_argument("--which", type=str, default="all",
                     choices=["all", "table1", "fig3", "fig4"])
+    ap.add_argument("--trace-preset", type=str, default=None,
+                    help="named TraceConfig calibration preset (e.g. "
+                         "'philly'); expanded into concrete trace fields "
+                         "so checkpoint fingerprints stay value-based")
     args = ap.parse_args(argv)
+    trace_kw = None
+    if args.trace_preset:
+        from repro.traces.generator import TRACE_PRESETS
+        if args.trace_preset not in TRACE_PRESETS:
+            ap.error(f"unknown trace preset {args.trace_preset!r}; "
+                     f"have {sorted(TRACE_PRESETS)}")
+        trace_kw = dict(TRACE_PRESETS[args.trace_preset])
     runs, n = (100, 500) if args.full else (args.runs, args.num_jobs)
     bench_out = args.bench_out
     if bench_out is None:
@@ -167,7 +180,8 @@ def main(argv=None) -> None:
 
     t0 = time.time()
     aggs, stats = _run_matrix(_configs_for(args.which), runs, n, args.load,
-                              args.seed0, args.workers, ckpt_dir)
+                              args.seed0, args.workers, ckpt_dir,
+                              trace_kw=trace_kw)
     results: Dict = {}
     if args.which in ("all", "table1"):
         t1 = table1(aggs)
@@ -197,7 +211,8 @@ def main(argv=None) -> None:
         bench = {
             "config": {"runs": runs, "num_jobs": n, "load": args.load,
                        "seed0": args.seed0, "which": args.which,
-                       "full": args.full},
+                       "full": args.full,
+                       "trace_preset": args.trace_preset},
             "pool": stats,
             "wall_s": round(wall, 3),
             "per_policy_sim_s": {label: a["sim_s_total"]

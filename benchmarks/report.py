@@ -139,6 +139,24 @@ def fitmask_table(path: str = "BENCH_fitmask.json") -> str:
     return "\n".join(lines)
 
 
+def reconfig_table(path: str = "BENCH_reconfig.json") -> str:
+    """Batched plan search vs the naive oracle per cube granularity."""
+    with open(path) as f:
+        bench = json.load(f)
+    lines = ["| cube | batched s | naive s | speedup | jcr |",
+             "|---|---|---|---|---|"]
+    for cube, r in bench.get("cube_sizes", {}).items():
+        lines.append(
+            f"| {cube} | {r['batched']['sim_seconds']:.2f} | "
+            f"{r['naive']['sim_seconds']:.2f} | {r['speedup']}x | "
+            f"{r['batched']['jcr']:.3f} |")
+    head = bench.get("headline", {})
+    if head:
+        lines.append(f"\nHeadline ({head.get('criterion')}): "
+                     f"{head.get('speedups')}, pass={head.get('pass')}")
+    return "\n".join(lines)
+
+
 def bench_table(alloc_path: str = "BENCH_allocator.json",
                 eval_path: str = "BENCH_paper_eval.json") -> str:
     """Perf trajectory: placement-engine rates (BENCH_allocator.json)
@@ -181,7 +199,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
                     choices=["all", "dryrun", "roofline", "paper", "bench",
-                             "fitmask"])
+                             "fitmask", "reconfig"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -201,6 +219,10 @@ def main() -> None:
             os.path.exists("BENCH_fitmask.json"):
         print("\n### Fitmask multi-box kernel (BENCH_fitmask.json)\n")
         print(fitmask_table())
+    if args.which in ("all", "reconfig") and \
+            os.path.exists("BENCH_reconfig.json"):
+        print("\n### Reconfiguration plan search (BENCH_reconfig.json)\n")
+        print(reconfig_table())
 
 
 if __name__ == "__main__":

@@ -24,11 +24,12 @@ def main() -> None:
     ap.add_argument("--skip-micro", action="store_true")
     ap.add_argument("--skip-alloc", action="store_true")
     ap.add_argument("--skip-fitmask", action="store_true")
+    ap.add_argument("--skip-reconfig", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
     from benchmarks import (allocator_bench, fitmask_bench, kernels_bench,
-                            paper_eval, roofline)
+                            paper_eval, reconfig_bench, roofline)
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -50,6 +51,18 @@ def main() -> None:
         print("=" * 70)
         print("## Allocator / placement-engine benchmark")
         allocator_bench.main(["--out", "BENCH_allocator.json"])
+
+    if not args.skip_reconfig:
+        print("=" * 70)
+        print("## Reconfiguration plan-search benchmark (batched vs naive)")
+        # Same snapshot policy as the fitmask bench: the tracked
+        # BENCH_reconfig.json is the 120-job sweep; CI-sized runs smoke
+        # the quick variant into experiments/.
+        if args.full:
+            reconfig_bench.main(["--out", "BENCH_reconfig.json"])
+        else:
+            reconfig_bench.main(["--quick", "--out",
+                                 "experiments/BENCH_reconfig_quick.json"])
 
     if not args.skip_fitmask:
         print("=" * 70)

@@ -264,52 +264,24 @@ class _ReconfigBase(PlacementPolicy):
     # engine (pure-python place_fold, clone-based can_ever_place).
     use_naive = False
 
-    def _fold_bound(self, fold: Fold) -> Tuple:
-        """Optimistic lexicographic score bound for a fold, computed
-        without placing it: the minimal broken-ring count (wrap on every
-        axis whose extent admits it — wrap availability only ever shrinks
-        the broken set), the minimal cube count (offset 0), the minimal
-        OCS links (wrap only where the extent forces it), zero fresh
-        cubes. Lower-bounds every plan the fold can produce, so a fold
-        whose bound loses to the incumbent is skipped without placing."""
-        n = self.cluster.cube_n
-        cache = getattr(fold, "_bound_cache", None)
-        if cache is None:
-            cache = {}
-            object.__setattr__(fold, "_bound_cache", cache)
-        hit = cache.get(n)
-        if hit is None:
-            a, b, c = fold.box
-            cross = (b * c, a * c, a * b)
-            ca = tuple(-(-e // n) for e in fold.box)
-            links = sum(
-                (ca[ax] - 1 + (1 if fold.box[ax] == ca[ax] * n else 0))
-                * cross[ax] for ax in range(3))
-            wrap_max = tuple(e % n == 0 for e in fold.box)
-            _, broken_min = verify_fold(fold, wrap_max)  # type: ignore[arg-type]
-            hit = (len(broken_min), volume(ca), links, 0)
-            cache[n] = hit
-        return hit
-
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
-        best: Optional[ReconfigPlan] = None
-        free = self.num_xpus - self.busy_xpus
-        for fold in self._folds(shape):
-            if self.use_naive:
+        if self.use_naive:
+            best: Optional[ReconfigPlan] = None
+            for fold in self._folds(shape):
                 plan = self.cluster.place_fold_naive(
                     fold, offset_search=self.offset_search)
-            else:
-                if shape.size > free:
-                    break  # every fold box has volume == job size
-                bound = best.score() if best is not None else None
-                if bound is not None and self._fold_bound(fold) >= bound:
-                    continue  # cannot strictly beat the incumbent
-                plan = self.cluster.place_fold(
-                    fold, offset_search=self.offset_search, bound=bound)
-            if plan is None:
-                continue
-            if best is None or plan.score() < best.score():
-                best = plan
+                if plan is None:
+                    continue
+                if best is None or plan.score() < best.score():
+                    best = plan
+        elif shape.size > self.num_xpus - self.busy_xpus:
+            best = None  # every fold box has volume == job size
+        else:
+            # The batched plan-search engine: fold-level bound pruning
+            # plus the per-fold pre-scored offset tables, all inside
+            # the cluster model (repro.core.reconfig.plan_search).
+            best = self.cluster.plan_search(
+                self._folds(shape), offset_search=self.offset_search)
         if best is None:
             return None
         self.cluster.commit(job_id, best)

@@ -93,6 +93,44 @@ def block_free_from_ii(ii: np.ndarray, local: Slice3) -> np.ndarray:
     return block_sums_from_ii(ii, local) == 0
 
 
+def block_sums_from_ii_multi(ii: np.ndarray,
+                             locals_: Sequence[Slice3]) -> np.ndarray:
+    """Occupied-cell counts for L sub-blocks in every grid at once:
+    batched integral image (B, X+1, Y+1, Z+1) x L locals -> int64
+    (L, B). One fancy-indexed gather per integral-image corner replaces
+    L separate :func:`block_sums_from_ii` calls. Part of the batched
+    sub-block query surface; note the allocator's plan search instead
+    consumes per-*shape* full-grid masks (``window_sums_from_ii``),
+    which amortize better when many origins of few shapes are queried
+    — this helper is the right form when the L sub-blocks have many
+    distinct shapes."""
+    lo = np.array([[s[0] for s in loc] for loc in locals_],
+                  dtype=np.int64)                       # (L, 3)
+    hi = np.array([[s[1] for s in loc] for loc in locals_],
+                  dtype=np.int64)                       # (L, 3)
+    x0, y0, z0 = lo[:, 0], lo[:, 1], lo[:, 2]
+    x1, y1, z1 = hi[:, 0], hi[:, 1], hi[:, 2]
+    iit = np.moveaxis(ii, 0, -1)                        # (X+1, Y+1, Z+1, B)
+    return (iit[x1, y1, z1] - iit[x0, y1, z1] - iit[x1, y0, z1]
+            - iit[x1, y1, z0] + iit[x0, y0, z1] + iit[x0, y1, z0]
+            + iit[x1, y0, z0] - iit[x0, y0, z0])
+
+
+def block_free_from_ii_multi(ii: np.ndarray,
+                             locals_: Sequence[Slice3]) -> np.ndarray:
+    """Bool (L, B): each of L sub-blocks entirely free in each grid."""
+    return block_sums_from_ii_multi(ii, locals_) == 0
+
+
+def free_counts(occ: np.ndarray) -> np.ndarray:
+    """Free-cell count per grid: (B, X, Y, Z) bool/int -> (B,) int64.
+    The host half of the engine ``free_counts`` contract
+    (``repro.kernels.fitmask.ops``)."""
+    occ = np.asarray(occ)
+    n3 = occ.shape[-3] * occ.shape[-2] * occ.shape[-1]
+    return n3 - occ.reshape(occ.shape[0], -1).sum(axis=1).astype(np.int64)
+
+
 def fit_mask(occ: np.ndarray, box: Dims) -> np.ndarray:
     """Bool mask over origins where the box fits in free space."""
     return window_sums(occ, box) == 0

@@ -6,6 +6,7 @@ hot numeric path (free-box search over the occupancy grid) lives in
 """
 from __future__ import annotations
 
+import functools
 import itertools
 from dataclasses import dataclass
 from typing import Iterator, Sequence, Tuple
@@ -147,6 +148,7 @@ def snake_order(dims2: Tuple[int, int]) -> Tuple[Tuple[int, int], ...]:
     return tuple(out)
 
 
+@functools.lru_cache(maxsize=None)
 def hamiltonian_cycle_2d(a: int, b: int) -> Tuple[Tuple[int, int], ...]:
     """Hamiltonian cycle of the a×b grid graph (requires a*b even,
     a, b >= 2). Returned as an ordered tuple of (i, j); consecutive
@@ -186,6 +188,7 @@ def hamiltonian_path_2d(b: int, c: int) -> Tuple[Tuple[int, int], ...]:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def hamiltonian_cycle_3d(dims: Dims) -> Tuple[Coord, ...]:
     """Hamiltonian cycle of an a×b×c box grid (even volume; at least two
     dims >= 2).

@@ -30,13 +30,24 @@ Placement: decompose a fold's target box into per-cube pieces at a
 uniform offset, assign physical cubes to grid positions (best-fit
 packing), and score plans by the paper's heuristic — fewest cubes,
 then fewest OCS links, then least new-cube fragmentation.
+
+The plan search is batched (see DESIGN.md §Batched reconfiguration
+plan search): every (offset, cube-grid, wrap, OCS-link, broken-ring)
+ingredient is occupancy-independent, so it is materialized once per
+(fold, cube size) as numpy arrays, sorted by optimistic score prefix,
+and the runtime loop only runs cube assignment for offsets that can
+still beat the incumbent — visiting best-prefix-first makes the
+score-bound prune a ``break``. ``place_fold_naive`` is the retained
+pure-python oracle; parity is byte-identical by construction (both
+searches return the feasible plan minimizing ``(score, offset
+product index)``).
 """
 from __future__ import annotations
 
 import functools
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -86,6 +97,128 @@ def _pieces_cached(box: Dims, offsets: Coord, n: int):
     cube_grid = tuple(ax_spans[-1][0] + 1 for ax_spans in spans)
     order = tuple(sorted(range(len(pieces)), key=lambda i: -sizes[i]))
     return tuple(pieces), order, cube_grid
+
+
+@functools.lru_cache(maxsize=131072)
+def _offset_table_cached(box: Dims, n: int):
+    """Occupancy-independent plan ingredients for every candidate corner
+    offset of ``box`` at cube size ``n``, vectorized over the whole
+    offset product (rows in ``itertools.product`` order): offsets
+    (O, 3), cube grids (O, 3), cube counts (O,), OCS links (O,) and a
+    3-bit per-row wrap code."""
+    cands = [_offset_candidates_cached(e, n) for e in box]
+    offs = np.array(list(itertools.product(*cands)),
+                    dtype=np.int64).reshape(-1, 3)
+    ext = np.asarray(box, dtype=np.int64)
+    cube_grid = -(-(offs + ext) // n)
+    ncubes = cube_grid.prod(axis=1)
+    wrap = (offs == 0) & (ext[None, :] == cube_grid * n)
+    a, b, c = box
+    cross = np.array([b * c, a * c, a * b], dtype=np.int64)
+    links = ((cube_grid - 1 + wrap) * cross).sum(axis=1)
+    wrapcode = wrap[:, 0] * 4 + wrap[:, 1] * 2 + wrap[:, 2]
+    return offs, ncubes, links, wrapcode
+
+
+@dataclass
+class _FoldPlanTable:
+    """One fold's valid offset candidates at a fixed (cube size, cube
+    budget), pre-sorted by optimistic score prefix ``(broken rings,
+    cubes, OCS links)`` with the offset product index as the stable
+    tiebreak — so a runtime search that walks rows in order and stops
+    at the first row whose prefix cannot beat the incumbent reproduces
+    the naive product-order scan exactly."""
+
+    offsets: List[Coord]
+    offs_arr: np.ndarray           # (O, 3) int64 — the same rows, batched
+    ncubes: np.ndarray
+    links: np.ndarray
+    nbroken: np.ndarray
+    broken: List[Tuple[int, ...]]
+    wrap: List[WrapFlags]
+    pinned_pos: Optional[int]      # row with offsets == (0, 0, 0), if valid
+    # The same prefix columns as plain-int lists: the runtime loop
+    # compares one row per iteration and python ints beat numpy
+    # scalars there.
+    prefix: List[Tuple[int, int, int]] = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        self.prefix = list(zip(self.nbroken.tolist(), self.ncubes.tolist(),
+                               self.links.tolist()))
+
+
+def fold_plan_table(fold: Fold, n: int,
+                    num_cubes: int) -> Optional[_FoldPlanTable]:
+    """Memoized per fold instance (folds are immutable and themselves
+    memoized per shape, so tables are computed once per process)."""
+    cache = getattr(fold, "_plan_table_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(fold, "_plan_table_cache", cache)
+    key = (n, num_cubes)
+    if key not in cache:
+        cache[key] = _build_plan_table(fold, n, num_cubes)
+    return cache[key]
+
+
+def _build_plan_table(fold: Fold, n: int,
+                      num_cubes: int) -> Optional[_FoldPlanTable]:
+    offs, ncubes, links, wrapcode = _offset_table_cached(fold.box, n)
+    keep = ncubes <= num_cubes
+    if not keep.any():
+        return None
+    # Fold validity / broken rings depend only on the wrap flags: 8
+    # possible codes, each certified once (and memoized on the fold).
+    ok8 = np.zeros(8, dtype=bool)
+    nb8 = np.zeros(8, dtype=np.int64)
+    br8: List[Tuple[int, ...]] = [()] * 8
+    for code in np.unique(wrapcode[keep]):
+        w = (bool(code & 4), bool(code & 2), bool(code & 1))
+        valid, br = verify_fold(fold, w)
+        ok8[code], nb8[code], br8[code] = valid, len(br), tuple(br)
+    rows = np.nonzero(keep & ok8[wrapcode])[0]
+    if not rows.size:
+        return None
+    nbroken = nb8[wrapcode[rows]]
+    order = np.lexsort((rows, links[rows], ncubes[rows], nbroken))
+    rows = rows[order]
+    offsets = [tuple(int(v) for v in offs[r]) for r in rows]
+    pinned = next((i for i, o in enumerate(offsets) if o == (0, 0, 0)),
+                  None)
+    return _FoldPlanTable(
+        offsets=offsets, offs_arr=offs[rows],
+        ncubes=ncubes[rows], links=links[rows], nbroken=nbroken[order],
+        broken=[br8[wrapcode[r]] for r in rows],
+        wrap=[(bool(c & 4), bool(c & 2), bool(c & 1))
+              for c in wrapcode[rows]],
+        pinned_pos=pinned)
+
+
+def fold_score_bound(fold: Fold, n: int) -> Tuple:
+    """Optimistic lexicographic score bound for a fold, computed
+    without placing it: the minimal broken-ring count (wrap on every
+    axis whose extent admits it — wrap availability only ever shrinks
+    the broken set), the minimal cube count (offset 0), the minimal
+    OCS links (wrap only where the extent forces it), zero fresh
+    cubes. Lower-bounds every plan the fold can produce, so a fold
+    whose bound loses to the incumbent is skipped without placing."""
+    cache = getattr(fold, "_bound_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(fold, "_bound_cache", cache)
+    hit = cache.get(n)
+    if hit is None:
+        a, b, c = fold.box
+        cross = (b * c, a * c, a * b)
+        ca = tuple(-(-e // n) for e in fold.box)
+        links = sum(
+            (ca[ax] - 1 + (1 if fold.box[ax] == ca[ax] * n else 0))
+            * cross[ax] for ax in range(3))
+        wrap_max = tuple(e % n == 0 for e in fold.box)
+        _, broken_min = verify_fold(fold, wrap_max)  # type: ignore[arg-type]
+        hit = (len(broken_min), volume(ca), links, 0)
+        cache[n] = hit
+    return hit
 
 
 @dataclass
@@ -154,20 +287,27 @@ class ReconfigTorus:
         # Occupancy epoch: bumped on every commit/release/scatter. All
         # occupancy-derived state consumed by ``place_fold`` is cached
         # per epoch and shared across every fold/offset query in one
-        # allocator step. Direct writes to ``occ``/``dedicated`` must be
-        # followed by ``bump_epoch()`` once any query has been issued.
+        # allocator step. Place/release record which cubes they touched
+        # so the next refresh updates only those rows; direct writes to
+        # ``occ``/``dedicated`` must be followed by ``bump_epoch()``
+        # once any query has been issued (full rebuild).
         self._epoch = 0
         self._busy = 0
         self._cache_epoch = -1
+        self._dirty: Optional[set] = None               # None = rebuild all
+        self._engine = None                             # resolved per refresh
         self._ii: Optional[np.ndarray] = None           # batched integral image
         self._free_cnt: Optional[np.ndarray] = None     # (C,) free cells/cube
         self._cube_empty: Optional[np.ndarray] = None   # (C,) bool
         self._order_key: Optional[np.ndarray] = None    # best-fit sort key
-        self._block_masks: Dict[Slice3, np.ndarray] = {}
-        self._sorted_cands: Dict[Tuple[Slice3, bool], np.ndarray] = {}
-        # Engine path: piece shapes ever queried (stable after the first
-        # few placements) and their per-epoch all-cube fit masks, filled
-        # by one multi-box pass over the whole cube batch.
+        self._global_order: Optional[np.ndarray] = None  # stable key argsort
+        self._elig_order: Optional[np.ndarray] = None    # ...non-dedicated
+        self._sorted_cands: Dict[Tuple[Slice3, bool], List[int]] = {}
+        # Per-epoch full-grid fit masks per sub-block shape (the shape
+        # set stabilizes after the first few placements). On an engine,
+        # all shapes seen so far are filled by one multi-box pass over
+        # the whole cube batch; the host path extracts each from the
+        # shared batched integral image.
         self._seen_shapes: set = set()
         self._shape_masks: Dict[Dims, np.ndarray] = {}
 
@@ -176,26 +316,88 @@ class ReconfigTorus:
         """Invalidate cached occupancy-derived state (call after any
         direct mutation of ``occ``/``dedicated``)."""
         self._epoch += 1
+        self._dirty = None          # unknown mutation: rebuild everything
         self._busy = int(self.occ.sum())
 
+    def _mark_dirty(self, cubes) -> None:
+        """Start a new occupancy epoch, remembering which cubes changed
+        so the refresh is incremental."""
+        self._epoch += 1
+        if self._dirty is not None:
+            self._dirty.update(cubes)
+
     def _derived(self) -> None:
-        """Refresh per-epoch derived state: one batched integral image
-        over all cubes plus per-cube free counts / best-fit sort keys."""
+        """Refresh per-epoch derived state: per-cube free counts and
+        best-fit sort keys, plus the batched integral image on the host
+        path (an accelerator engine answers both sub-block freeness and
+        free counts itself — no host integral image is ever built).
+        When only a few cubes changed since the last refresh (tracked
+        by place/release), just those rows are recomputed."""
         if self._cache_epoch == self._epoch:
             return
         n3 = self.cube_n ** 3
-        self._ii = fitmask.batched_integral_image(self.occ)
-        self._free_cnt = n3 - self._ii[:, -1, -1, -1]
-        self._cube_empty = self._free_cnt == n3
+        engine = _torus.resolve_fitmask_engine(self.fitmask_engine)
+        dirty = self._dirty
+        partial = (dirty is not None and self._cache_epoch >= 0
+                   and engine is self._engine
+                   and len(dirty) * 4 <= self.num_cubes)
+        if partial:
+            d = np.fromiter(dirty, dtype=np.int64, count=len(dirty))
+            d.sort()
+            if d.size:
+                if engine is None:
+                    self._ii[d] = fitmask.integral_image(self.occ[d])
+                    self._free_cnt[d] = n3 - self._ii[d, -1, -1, -1]
+                    for s, m in self._shape_masks.items():
+                        m[d] = False
+                        w = fitmask.window_sums_from_ii(self._ii[d], s)
+                        if w.size:
+                            m[d, :w.shape[1], :w.shape[2], :w.shape[3]] = \
+                                w == 0
+                else:
+                    self._free_cnt[d] = np.asarray(
+                        engine.free_counts(self.occ[d])).astype(np.int64)
+                    if self._shape_masks:
+                        shapes = sorted(self._shape_masks)
+                        out = np.asarray(engine.multibox(self.occ[d],
+                                                         shapes))
+                        for k, s in enumerate(shapes):
+                            self._shape_masks[s][d] = out[:, k] != 0
+                self._cube_empty[d] = self._free_cnt[d] == n3
+        else:
+            if engine is None:
+                self._ii = fitmask.batched_integral_image(self.occ)
+                self._free_cnt = n3 - self._ii[:, -1, -1, -1]
+            else:
+                self._ii = None
+                self._free_cnt = np.asarray(
+                    engine.free_counts(self.occ)).astype(np.int64)
+            self._cube_empty = self._free_cnt == n3
+            self._shape_masks = {}
         # Best-fit ordering: least leftover first, non-empty cubes break
         # ties (the piece size shifts every key equally, so one key
         # serves all piece sizes); np.argmin's first-minimum rule becomes
         # a stable sort with index tiebreak.
         self._order_key = self._free_cnt * 2 + self._cube_empty
-        self._block_masks = {}
+        self._global_order = np.argsort(self._order_key, kind="stable")
+        # Eligible non-empty cubes: any plan on nc cubes strands at
+        # least nc - this many fresh (previously empty) cubes — the
+        # per-row fresh lower bound the search prunes with.
+        self._n_nonempty_elig = int(
+            (~self._cube_empty & (self.dedicated < 0)).sum())
+        self._elig_order = None
+        self._engine = engine
         self._sorted_cands = {}
-        self._shape_masks = {}
+        self._dirty = set()
         self._cache_epoch = self._epoch
+
+    def _eligible_order(self) -> np.ndarray:
+        """Non-dedicated cube ids in best-fit order (the per-epoch
+        stable key argsort filtered to eligible cubes)."""
+        if self._elig_order is None:
+            go = self._global_order
+            self._elig_order = go[(self.dedicated < 0)[go]]
+        return self._elig_order
 
     # ------------------------------------------------------------------
     @property
@@ -239,32 +441,42 @@ class ReconfigTorus:
             out.append(((ix, iy, iz), (sx, sy, sz)))
         return out
 
-    def _block_free_mask(self, local: Slice3) -> np.ndarray:
-        """Bool mask over cubes: sub-block ``local`` entirely free.
-        Answered from the per-epoch batched integral image (numpy) or
-        from the engine's per-epoch multi-box fit masks, and memoized
-        per local slice (every fold/offset in a step reuses it)."""
+    def _shape_fit_mask(self, shape: Dims) -> np.ndarray:
+        """Full-grid fit mask for one sub-block shape across ALL cubes:
+        bool (C, n, n, n), True where the shape fits in free space with
+        its corner at that cell. This is the one engine-vs-host routing
+        point for sub-block freeness — the host path extracts window
+        sums from the per-epoch batched integral image, an accelerator
+        engine answers every shape seen so far in one multi-box pass —
+        and every per-local query (:meth:`_block_free_mask`, the cube
+        assignment, the vectorized single-cube search) is a view into
+        it. Memoized per shape per epoch; place/release patch only the
+        rows of cubes they touched."""
         self._derived()
-        m = self._block_masks.get(local)
+        m = self._shape_masks.get(shape)
         if m is None:
-            engine = _torus.resolve_fitmask_engine(self.fitmask_engine)
-            if engine is None:
-                m = fitmask.block_free_from_ii(self._ii, local)
+            if self._engine is None:
+                m = np.zeros(self.occ.shape, dtype=bool)
+                w = fitmask.window_sums_from_ii(self._ii, shape)
+                if w.size:
+                    m[:, :w.shape[1], :w.shape[2], :w.shape[3]] = w == 0
+                self._shape_masks[shape] = m
             else:
-                shape = tuple(hi - lo for lo, hi in local)
-                origin = tuple(lo for lo, _ in local)
-                masks = self._shape_masks
-                if shape not in masks:
-                    # One multi-box pass answers every piece shape seen
-                    # so far for ALL cubes of this epoch.
-                    self._seen_shapes.add(shape)
-                    shapes = sorted(self._seen_shapes)
-                    out = np.asarray(engine.multibox(self.occ, shapes))
-                    masks = self._shape_masks = {
-                        s: out[:, k] != 0 for k, s in enumerate(shapes)}
-                m = masks[shape][(slice(None),) + origin]
-            self._block_masks[local] = m
+                # One multi-box pass answers every piece shape seen so
+                # far for ALL cubes of this epoch.
+                self._seen_shapes.add(shape)
+                shapes = sorted(self._seen_shapes)
+                out = np.asarray(self._engine.multibox(self.occ, shapes))
+                self._shape_masks = {
+                    s: out[:, k] != 0 for k, s in enumerate(shapes)}
+                m = self._shape_masks[shape]
         return m
+
+    def _block_free_mask(self, local: Slice3) -> np.ndarray:
+        """Bool mask over cubes: sub-block ``local`` entirely free."""
+        shape = tuple(hi - lo for lo, hi in local)
+        origin = tuple(lo for lo, _ in local)
+        return self._shape_fit_mask(shape)[(slice(None),) + origin]
 
     def _block_free_mask_naive(self, local: Slice3) -> np.ndarray:
         """Reference implementation (direct slice scan), retained for
@@ -273,11 +485,14 @@ class ReconfigTorus:
         sub = self.occ[:, x0:x1, y0:y1, z0:z1]
         return ~sub.any(axis=(1, 2, 3))
 
-    def _cands_for(self, local: Slice3, chained: bool) -> np.ndarray:
+    def _cands_for(self, local: Slice3, chained: bool) -> List[int]:
         """Cube ids eligible for a piece, pre-sorted by the best-fit key
-        (stable, index tiebreak) — equivalent to np.argmin over the
-        leftover key but computed once per (local, chained) per epoch."""
-        self._derived()
+        (stable, index tiebreak) — the per-epoch stable argsort of the
+        key, filtered to eligible cubes, which equals sorting the
+        eligible ids by ``(key, id)``. Computed once per (local,
+        chained) per epoch; returned as a plain list (the assignment
+        scan is a tight python loop). Callers hold the epoch current
+        (``place_fold`` refreshes before searching)."""
         key = (local, chained)
         arr = self._sorted_cands.get(key)
         if arr is None:
@@ -285,8 +500,8 @@ class ReconfigTorus:
                 mask = self._cube_empty & (self.dedicated < 0)
             else:
                 mask = self._block_free_mask(local) & (self.dedicated < 0)
-            ids = np.nonzero(mask)[0]
-            arr = ids[np.argsort(self._order_key[ids], kind="stable")]
+            go = self._global_order
+            arr = go[mask[go]].tolist()
             self._sorted_cands[key] = arr
         return arr
 
@@ -317,80 +532,158 @@ class ReconfigTorus:
         shape".
 
         ``bound`` is an incumbent lexicographic score: only plans that
-        strictly beat it are returned, and offsets whose optimistic
-        score bound (exact broken/cubes/links, fresh=0) cannot beat the
-        incumbent are skipped without running cube assignment. With
-        ``bound=None`` the result equals :meth:`place_fold_naive`.
+        strictly beat it are returned. All offset candidates were
+        pre-scored into the fold's plan table (vectorized, occupancy
+        independent) and sorted by optimistic prefix, so the search
+        runs cube assignment best-prefix-first and terminates at the
+        first row that cannot beat the incumbent. With ``bound=None``
+        the result equals :meth:`place_fold_naive`.
         """
         box = fold.box
         n = self.cube_n
         if any(ext > self.max_extent for ext in box):
             return None
+        tab = fold_plan_table(fold, n, self.num_cubes)
+        if tab is None:
+            return None
         self._derived()
-        cube_empty = self._cube_empty
-        best: Optional[ReconfigPlan] = None
-        single_cube = all(ext <= n for ext in box)
         # Port alignment only binds multi-cube chains; a single-cube job
         # is an ordinary within-cube box placement, so its offsets are
-        # always searchable. The naive (Reconfig) baseline pins chained
-        # pieces to the cube corner.
-        if offset_search or single_cube:
-            offset_space = itertools.product(
-                *(_offset_candidates_cached(e, n) for e in box))
+        # always searchable (and fully vectorizable). The naive
+        # (Reconfig) baseline pins chained pieces to the cube corner.
+        if all(ext <= n for ext in box):
+            return self._place_single_cube(fold, tab, bound)
+        if offset_search:
+            positions = range(len(tab.offsets))
+        elif tab.pinned_pos is not None:
+            positions = (tab.pinned_pos,)
         else:
-            offset_space = [(0, 0, 0)]
-        for offsets in offset_space:
-            # Everything needed to prune is arithmetic on (box, offsets):
-            # cube grid, wrap flags, broken rings (memoized per fold) and
-            # OCS links. The span decomposition is only fetched for
-            # offsets that can still beat the incumbent.
-            cube_grid = tuple(-(-(o + e) // n)
-                              for o, e in zip(offsets, box))
-            ncubes = volume(cube_grid)
-            if ncubes > self.num_cubes:
-                continue
-            wrap = tuple(
-                offsets[ax] == 0 and box[ax] == cube_grid[ax] * n
-                for ax in range(3))
-            valid, broken = verify_fold(fold, wrap)  # type: ignore[arg-type]
-            if not valid:
-                continue
-            links = self._ocs_links(box, offsets, cube_grid, n,
-                                    wrap)  # type: ignore[arg-type]
-            incumbent = best.score() if best is not None else bound
-            if incumbent is not None and \
-                    (len(broken), ncubes, links, 0) >= incumbent:
-                continue
-            pieces_spec, order, cube_grid = _pieces_cached(box, offsets, n)
-            multi = len(pieces_spec) > 1
-            chained = multi and self.dedicate_chained
-            taken: set = set()
-            assignment: Dict[int, int] = {}
-            ok = True
-            for idx in order:
-                local = pieces_spec[idx][1]
-                chosen = -1
-                for cid in self._cands_for(local, chained):
-                    if cid not in taken:
-                        chosen = int(cid)
-                        break
-                if chosen < 0:
-                    ok = False
+            return None
+        best: Optional[ReconfigPlan] = None
+        incumbent = bound
+        dedic = self.dedicate_chained
+        navail = self._n_nonempty_elig
+        for t in positions:
+            nb, nc, lk = p3 = tab.prefix[t]
+            # Fresh-cube lower bound: a chained plan dedicates nc empty
+            # cubes (fresh == nc exactly); otherwise at most ``navail``
+            # of the nc cubes can be non-empty.
+            fresh_lb = nc if (dedic and nc > 1) else max(0, nc - navail)
+            if incumbent is not None:
+                i3 = incumbent[:3]
+                # Rows are prefix-sorted: once this row cannot strictly
+                # beat the incumbent, no later row can either.
+                if p3 > i3 or (p3 == i3 and incumbent[3] == 0):
                     break
-                assignment[idx] = chosen
-                taken.add(chosen)
-            if not ok:
+                # Rows that cannot strictly beat the incumbent even at
+                # their fresh bound skip cube assignment entirely.
+                if (nb, nc, lk, fresh_lb) >= incumbent:
+                    continue
+            plan = self._assign_plan(fold, tab, t)
+            if plan is None:
                 continue
-            pieces = [Piece(pieces_spec[i][0], assignment[i],
-                            pieces_spec[i][1]) for i in range(len(pieces_spec))]
-            fresh = int(sum(cube_empty[p.cube_id] for p in pieces))
-            plan = ReconfigPlan(
-                fold=fold, offsets=offsets, cube_grid=cube_grid,  # type: ignore
-                pieces=pieces, wrap=wrap,  # type: ignore[arg-type]
-                broken_rings=tuple(broken),
-                num_ocs_links=links, fresh_cubes=fresh)
-            if incumbent is None or plan.score() < incumbent:
+            score = plan.score()
+            if incumbent is None or score < incumbent:
                 best = plan
+                incumbent = score
+                # A plan at its own row's fresh bound is unbeatable:
+                # same-prefix rows share the bound (ties never replace)
+                # and later prefixes only score worse.
+                if score[3] == fresh_lb:
+                    break
+        return best
+
+    def _place_single_cube(self, fold: Fold, tab: _FoldPlanTable,
+                           bound: Optional[Tuple]) -> Optional[ReconfigPlan]:
+        """Fully vectorized search for a fold whose box fits inside one
+        cube — the bulk of a Philly-like trace. Every (offset, cube)
+        candidate is scored in one numpy pass: the full-grid fit mask
+        answers sub-block freeness for all offsets of all cubes at
+        once, the per-epoch best-fit cube order turns cube choice into
+        a column argmax, and the winning row is a single lexicographic
+        argmin over ``(broken, links, fresh, product index)`` — exactly
+        the naive scan's ``(score, offset order)`` minimum."""
+        shape = fold.box
+        sub = self._shape_fit_mask(shape)
+        elig = self._eligible_order()
+        if not elig.size:
+            return None
+        offs = tab.offs_arr
+        sub = sub[elig][:, offs[:, 0], offs[:, 1], offs[:, 2]]  # (E, O)
+        feas = sub.any(axis=0)
+        if not feas.any():
+            return None
+        chosen = elig[sub.argmax(axis=0)]       # first eligible per offset
+        fresh = self._cube_empty[chosen].astype(np.int64)
+        rows = np.nonzero(feas)[0]
+        order = np.lexsort((rows, fresh[rows], tab.links[rows],
+                            tab.nbroken[rows]))
+        t = int(rows[order[0]])
+        score = (int(tab.nbroken[t]), 1, int(tab.links[t]), int(fresh[t]))
+        if bound is not None and score >= bound:
+            return None
+        cube = int(chosen[t])
+        ox, oy, oz = tab.offsets[t]
+        a, b, c = shape
+        piece = Piece((0, 0, 0), cube,
+                      ((ox, ox + a), (oy, oy + b), (oz, oz + c)))
+        return ReconfigPlan(
+            fold=fold, offsets=tab.offsets[t], cube_grid=(1, 1, 1),
+            pieces=[piece], wrap=tab.wrap[t], broken_rings=tab.broken[t],
+            num_ocs_links=int(tab.links[t]), fresh_cubes=int(fresh[t]))
+
+    def _assign_plan(self, fold: Fold, tab: _FoldPlanTable,
+                     t: int) -> Optional[ReconfigPlan]:
+        """Best-fit cube assignment for one pre-scored offset row, or
+        None if some piece has no eligible cube left."""
+        offsets = tab.offsets[t]
+        pieces_spec, order, cube_grid = _pieces_cached(fold.box, offsets,
+                                                       self.cube_n)
+        chained = len(pieces_spec) > 1 and self.dedicate_chained
+        taken: set = set()
+        assignment: Dict[int, int] = {}
+        for idx in order:
+            local = pieces_spec[idx][1]
+            chosen = -1
+            for cid in self._cands_for(local, chained):
+                if cid not in taken:
+                    chosen = cid
+                    break
+            if chosen < 0:
+                return None
+            assignment[idx] = chosen
+            taken.add(chosen)
+        pieces = [Piece(pieces_spec[i][0], assignment[i], pieces_spec[i][1])
+                  for i in range(len(pieces_spec))]
+        cube_empty = self._cube_empty
+        fresh = int(sum(cube_empty[p.cube_id] for p in pieces))
+        return ReconfigPlan(
+            fold=fold, offsets=offsets, cube_grid=cube_grid,
+            pieces=pieces, wrap=tab.wrap[t],
+            broken_rings=tab.broken[t],
+            num_ocs_links=int(tab.links[t]), fresh_cubes=fresh)
+
+    def plan_search(self, folds: Sequence[Fold], offset_search: bool = True,
+                    ) -> Optional[ReconfigPlan]:
+        """Best plan across a fold candidate list — the batched engine
+        behind ``_ReconfigBase.try_place``. Folds are visited in caller
+        order (scores tie-break on it); each fold's occupancy-free
+        optimistic bound (:func:`fold_score_bound`) prunes whole folds
+        against the incumbent before any table or occupancy state is
+        consulted."""
+        best: Optional[ReconfigPlan] = None
+        bound: Optional[Tuple] = None
+        n = self.cube_n
+        for fold in folds:
+            if bound is not None and fold_score_bound(fold, n) >= bound:
+                continue  # cannot strictly beat the incumbent
+            plan = self.place_fold(fold, offset_search=offset_search,
+                                   bound=bound)
+            if plan is None:
+                continue
+            if bound is None or plan.score() < bound:
+                best = plan
+                bound = plan.score()
         return best
 
     def place_fold_naive(self, fold: Fold,
@@ -486,7 +779,7 @@ class ReconfigTorus:
                     raise ValueError("chained cube must be empty at commit")
                 self.dedicated[p.cube_id] = job_id
             self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = True
-        self._epoch += 1
+        self._mark_dirty(p.cube_id for p in plan.pieces)
         self._busy += sum(p.size for p in plan.pieces)
         self.allocations[job_id] = list(plan.pieces)
         self.alloc_meta[job_id] = {
@@ -498,13 +791,14 @@ class ReconfigTorus:
         }
 
     def release(self, job_id: int) -> None:
-        for p in self.allocations.pop(job_id):
+        pieces = self.allocations.pop(job_id)
+        for p in pieces:
             (x0, x1), (y0, y1), (z0, z1) = p.local
             self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = False
             if self.dedicated[p.cube_id] == job_id:
                 self.dedicated[p.cube_id] = -1
             self._busy -= p.size
-        self._epoch += 1
+        self._mark_dirty(p.cube_id for p in pieces)
         self.alloc_meta.pop(job_id, None)
 
     # ------------------------------------------------------------------
@@ -534,7 +828,7 @@ class ReconfigTorus:
             self.occ[cid, x, y, z] = True
             pieces.append(Piece((0, 0, 0), cid,
                                 ((x, x + 1), (y, y + 1), (z, z + 1))))
-        self._epoch += 1
+        self._mark_dirty(c[0] for c in cells)
         self._busy += len(pieces)
         self.allocations[job_id] = pieces
         self.alloc_meta[job_id] = {"kind": "scatter",

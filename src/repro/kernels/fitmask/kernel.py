@@ -124,6 +124,33 @@ def fitmask_multibox(occ: jnp.ndarray, boxes: Tuple[Box, ...],
     )(occ.astype(jnp.int32))
 
 
+def _occupancy_counts_kernel(occ_ref, out_ref):
+    out_ref[0, 0] = jnp.sum(occ_ref[0].astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def occupancy_counts(occ: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Occupied-cell count per grid: (B, X, Y, Z) bool/int -> (B,) int32.
+
+    The engine registry's ``free_counts`` query runs on this (free =
+    X*Y*Z - occupied): the reconfigurable-torus allocator needs per-cube
+    free counts for its best-fit ordering every occupancy epoch, and
+    answering them device-side is what lets accelerator engines drop the
+    host integral-image pass entirely. One program per grid, whole grid
+    in VMEM (same batching axis as the fitmask kernels), single VPU
+    reduction."""
+    bsz, x, y, z = occ.shape
+    out = pl.pallas_call(
+        _occupancy_counts_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, x, y, z), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+        interpret=interpret,
+    )(occ.astype(jnp.int32))
+    return out[:, 0]
+
+
 def fitmask_multibox_singlepass_baseline(
         occ: jnp.ndarray, boxes: Sequence[Box],
         interpret: bool = True) -> jnp.ndarray:

@@ -20,7 +20,10 @@ Selection: an explicit ``engine=`` argument wins, then
 environment variable, then ``numpy``. All engines share the contract
 ``multibox(occ, boxes) -> (B, K, X, Y, Z) int32`` with every plane
 padded to the full grid (0 where the box overhangs or cannot fit), so
-callers never special-case engine, K, or infeasible boxes.
+callers never special-case engine, K, or infeasible boxes — plus
+``free_counts(occ) -> (B,)`` (free cells per grid), which the
+reconfigurable torus uses for best-fit cube ordering so accelerator
+runs never rebuild the host integral image.
 """
 from __future__ import annotations
 
@@ -43,13 +46,21 @@ def _canon_boxes(boxes: Sequence[Box]) -> Tuple[Box, ...]:
 
 
 class FitmaskEngine:
-    """One fitmask backend. Subclasses implement :meth:`multibox`;
-    :meth:`fitmask` is the single-box convenience on top of it."""
+    """One fitmask backend. Subclasses implement :meth:`multibox` and
+    :meth:`free_counts`; :meth:`fitmask` is the single-box convenience
+    on top of :meth:`multibox`."""
 
     name = "base"
 
     def multibox(self, occ, boxes: Sequence[Box]):
         """(B, X, Y, Z) x K boxes -> (B, K, X, Y, Z) int32."""
+        raise NotImplementedError
+
+    def free_counts(self, occ):
+        """Free-cell count per grid: (B, X, Y, Z) -> (B,) int. The
+        reconfigurable torus orders cubes best-fit by this every
+        occupancy epoch; engines answer it natively so accelerator runs
+        never rebuild the host integral image (ROADMAP item)."""
         raise NotImplementedError
 
     def fitmask(self, occ, box: Box):
@@ -67,6 +78,9 @@ class NumpyEngine(FitmaskEngine):
     def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
         return np_engine.fit_mask_multi(np.asarray(occ),
                                         _canon_boxes(boxes))
+
+    def free_counts(self, occ) -> np.ndarray:
+        return np_engine.free_counts(np.asarray(occ))
 
 
 class JaxEngine(FitmaskEngine):
@@ -123,6 +137,22 @@ class JaxEngine(FitmaskEngine):
         ii = self._ii_fn()(occ)
         return jnp.stack([self._window_fn(b)(ii) for b in boxes], axis=1)
 
+    @staticmethod
+    @functools.cache
+    def _free_counts_fn():
+        import jax
+        import jax.numpy as jnp
+
+        def free(occ):
+            n3 = occ.shape[1] * occ.shape[2] * occ.shape[3]
+            return n3 - jnp.sum(occ.astype(jnp.int32), axis=(1, 2, 3))
+
+        return jax.jit(free)
+
+    def free_counts(self, occ):
+        import jax.numpy as jnp
+        return self._free_counts_fn()(jnp.asarray(occ))
+
 
 class PallasEngine(FitmaskEngine):
     """The multi-box Pallas kernel: one VMEM pass for all K boxes,
@@ -153,6 +183,13 @@ class PallasEngine(FitmaskEngine):
                                        tuple(int(v) for v in box),
                                        interpret=self._interp())
 
+    def free_counts(self, occ):
+        import jax.numpy as jnp
+        from . import kernel as _kernel
+        occ = jnp.asarray(occ)
+        n3 = occ.shape[1] * occ.shape[2] * occ.shape[3]
+        return n3 - _kernel.occupancy_counts(occ, interpret=self._interp())
+
 
 class RefEngine(FitmaskEngine):
     """reduce_window oracle (jax, unjitted per box)."""
@@ -169,6 +206,12 @@ class RefEngine(FitmaskEngine):
             return jnp.zeros((bsz, 0, x, y, z), jnp.int32)
         return jnp.stack([_ref.fitmask_reference(occ, b) for b in boxes],
                          axis=1)
+
+    def free_counts(self, occ):
+        import jax.numpy as jnp
+        occ = jnp.asarray(occ)
+        n3 = occ.shape[1] * occ.shape[2] * occ.shape[3]
+        return n3 - jnp.sum(occ.astype(jnp.int32), axis=(1, 2, 3))
 
 
 _REGISTRY: Dict[str, Type[FitmaskEngine]] = {}
@@ -247,4 +290,16 @@ def fitmask_multi(occ, boxes: Sequence[Box], engine: Optional[str] = None):
     if squeeze:
         occ = occ[None]
     out = get_engine(engine).multibox(occ, boxes)
+    return out[0] if squeeze else out
+
+
+def free_counts(occ, engine: Optional[str] = None):
+    """Free-cell count per grid: (B, X, Y, Z) -> (B,) int, or a single
+    (X, Y, Z) grid -> scalar. Routed through the selected engine, so
+    accelerator backends answer it without a host integral-image
+    build."""
+    squeeze = occ.ndim == 3
+    if squeeze:
+        occ = occ[None]
+    out = get_engine(engine).free_counts(occ)
     return out[0] if squeeze else out

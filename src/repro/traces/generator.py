@@ -53,6 +53,40 @@ class TraceConfig:
     cube4_n: int = 4
     cube4_budget: int = 64
 
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "TraceConfig":
+        """A named calibration preset with optional field overrides:
+        ``TraceConfig.preset("philly", num_jobs=500)``."""
+        if name not in TRACE_PRESETS:
+            raise KeyError(f"unknown trace preset {name!r}; "
+                           f"have {sorted(TRACE_PRESETS)}")
+        fields = dict(TRACE_PRESETS[name])
+        fields.update(overrides)
+        return cls(**fields)
+
+
+# Named TraceConfig presets (field overrides on top of the defaults).
+#
+# ``philly`` is the trace-calibration first step (ROADMAP item): the
+# paper samples inter-arrival and duration statistics from the
+# Microsoft Philly trace (Jeon et al., ATC '19). Our default keeps the
+# published ~13-minute median but its lognormal tail (sigma 1.4, so
+# mean/median = exp(sigma^2/2) ~ 2.7) is far lighter than Philly's —
+# the reported mean runtime is hours against the 13-minute median,
+# i.e. mean/median ~ 10, which a lognormal matches at sigma =
+# sqrt(2 ln 10) ~ 2.15. Philly's GPU-count distribution also puts most
+# of its mass on single-machine (<= 8 GPU) jobs, which the default
+# 256-XPU-mean truncated exponential underweights; scale 96 moves the
+# small-job mass toward the Philly shares while keeping the paper's
+# [1, 4096] support. The measured Table 1 / Fig 4 gaps this preset
+# targets are recorded in EXPERIMENTS.md §Paper-scale.
+TRACE_PRESETS = {
+    "philly": {
+        "duration_sigma": 2.15,       # mean/median ~ 10 (Philly-like tail)
+        "size_scale": 96.0,           # small-job mass per Philly GPU counts
+    },
+}
+
 
 def _truncated_exp_sizes(rng: np.random.Generator, n: int, scale: float,
                          hi: int) -> np.ndarray:

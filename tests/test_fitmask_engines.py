@@ -68,6 +68,19 @@ def test_set_default_engine_overrides_env(monkeypatch):
 
 
 # ------------------------------------------------------- parity
+def test_all_engines_agree_on_free_counts():
+    occ = _occ(seed=7)
+    ref = np.asarray(ops.get_engine("numpy").free_counts(occ))
+    assert ref.shape == (occ.shape[0],)
+    assert np.array_equal(ref, [(~occ[i]).sum()
+                                for i in range(occ.shape[0])])
+    for name in ENGINES:
+        out = np.asarray(ops.get_engine(name).free_counts(occ))
+        assert np.array_equal(out, ref), name
+    assert np.array_equal(np.asarray(ops.free_counts(occ, engine="jax")),
+                          ref)
+
+
 def test_all_engines_agree_on_multibox():
     occ = _occ()
     ref = ops.get_engine("numpy").multibox(occ, BOXES)
@@ -177,6 +190,31 @@ def test_reconfig_block_free_engine_parity():
         for name, rt in rts.items():
             assert (rt._block_free_mask(local) == expect).all(), \
                 (name, local)
+
+
+@pytest.mark.parametrize("engine", ["jax", "pallas"])
+def test_engine_runs_build_no_host_integral_image(engine, monkeypatch):
+    """ROADMAP item closed by PR 4: with an accelerator engine active,
+    the reconfigurable torus answers BOTH sub-block freeness and
+    per-cube free counts from the engine — zero host integral-image
+    builds on the placement path (same poison pattern as the numpy
+    engine's no-jax guarantee)."""
+    from repro.core import fitmask as core_fitmask
+    from repro.core.geometry import JobShape
+
+    def _poisoned(*a, **kw):
+        raise AssertionError("engine run built a host integral image")
+
+    monkeypatch.setattr(core_fitmask, "integral_image", _poisoned)
+    monkeypatch.setattr(core_fitmask, "batched_integral_image", _poisoned)
+    for policy in ("reconfig", "rfold"):
+        pol = make_policy(policy, num_xpus=256, cube_n=4,
+                          fitmask_engine=engine)
+        assert pol.try_place(1, JobShape((4, 4, 2))) is not None
+        assert pol.try_place(2, JobShape((8, 2, 2))) is not None
+        pol.release(1)
+        assert pol.try_place(3, JobShape((4, 4, 4))) is not None
+        assert pol.cluster._ii is None
 
 
 def test_policy_engine_parity_small_sim():

@@ -1,0 +1,103 @@
+"""Trace-generator distribution-shape tests + the Philly calibration
+preset (ROADMAP trace-calibration first step, PR 4).
+
+The synthetic trace must actually follow the distributions it claims:
+truncated-exponential sizes, lognormal durations with the configured
+median/tail, Poisson arrivals at the target offered load. The
+``philly`` preset is checked against its calibration targets (heavy
+mean/median duration ratio, small-job size mass)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.traces.generator import (TRACE_PRESETS, TraceConfig,
+                                    _truncated_exp_sizes, generate_trace)
+
+
+def _trace(cfg):
+    return generate_trace(cfg)
+
+
+# ------------------------------------------------------- distributions
+def test_duration_median_and_tail_match_config():
+    cfg = TraceConfig(num_jobs=20_000, seed=1)
+    durs = np.array([j.duration for j in _trace(cfg)])
+    # lognormal: median = exp(mu), sigma = std of log durations
+    assert np.median(durs) == pytest.approx(cfg.duration_median_s, rel=0.05)
+    assert np.std(np.log(durs)) == pytest.approx(cfg.duration_sigma,
+                                                 rel=0.03)
+
+
+def test_sizes_follow_truncated_exponential():
+    """Pre-rounding sampler vs the analytic truncated-exp CDF."""
+    cfg = TraceConfig()
+    rng = np.random.default_rng(2)
+    raw = _truncated_exp_sizes(rng, 50_000, cfg.size_scale, cfg.size_max)
+    assert raw.min() >= 1 and raw.max() <= cfg.size_max
+    fmax = 1.0 - math.exp(-cfg.size_max / cfg.size_scale)
+    for s in (64, 256, 1024):
+        analytic = (1.0 - math.exp(-s / cfg.size_scale)) / fmax
+        empirical = float((raw <= s).mean())
+        assert empirical == pytest.approx(analytic, abs=0.02), s
+
+
+def test_arrivals_hit_target_load():
+    cfg = TraceConfig(num_jobs=20_000, seed=3, target_load=1.2)
+    jobs = _trace(cfg)
+    arrivals = np.array([j.arrival for j in jobs])
+    demand = float(np.mean([j.shape.size * j.duration for j in jobs]))
+    mean_ia = float(np.mean(np.diff(arrivals)))
+    load = demand / (mean_ia * cfg.cluster_xpus)
+    # shapes bump sizes slightly (even rounding, feasibility), so the
+    # realized load only approximates the target
+    assert load == pytest.approx(cfg.target_load, rel=0.1)
+
+
+# ------------------------------------------------------- philly preset
+def test_philly_preset_fields_and_overrides():
+    cfg = TraceConfig.preset("philly", num_jobs=7, seed=42)
+    assert cfg.duration_sigma == TRACE_PRESETS["philly"]["duration_sigma"]
+    assert cfg.size_scale == TRACE_PRESETS["philly"]["size_scale"]
+    assert cfg.num_jobs == 7 and cfg.seed == 42
+    # untouched fields keep their defaults
+    assert cfg.duration_median_s == TraceConfig().duration_median_s
+    with pytest.raises(KeyError):
+        TraceConfig.preset("borg")
+
+
+def test_philly_preset_duration_tail():
+    """Calibration target: mean/median duration ratio ~ exp(sigma^2/2)
+    ~ 10 (Philly's reported hours-scale mean over a 13-minute median),
+    vs ~2.7 for the default config."""
+    cfg = TraceConfig.preset("philly", num_jobs=50_000, seed=4)
+    durs = np.array([j.duration for j in _trace(cfg)])
+    ratio = float(np.mean(durs) / np.median(durs))
+    expect = math.exp(cfg.duration_sigma ** 2 / 2)
+    assert ratio == pytest.approx(expect, rel=0.25)
+    assert ratio > 2 * math.exp(TraceConfig().duration_sigma ** 2 / 2)
+
+
+def test_philly_preset_small_job_mass():
+    """The preset moves size mass toward Philly's small-job share:
+    clearly more <=16-XPU jobs than the default scale produces."""
+    small = {}
+    for name, cfg in [("default", TraceConfig(num_jobs=20_000, seed=5)),
+                      ("philly", TraceConfig.preset(
+                          "philly", num_jobs=20_000, seed=5))]:
+        sizes = np.array([j.shape.size for j in _trace(cfg)])
+        small[name] = float((sizes <= 16).mean())
+    assert small["philly"] > small["default"] + 0.05
+    # both stay inside the paper's truncated-exp support
+    assert small["philly"] < 1.0
+
+
+def test_preset_trace_is_deterministic():
+    a = _trace(TraceConfig.preset("philly", num_jobs=40, seed=9))
+    b = _trace(TraceConfig.preset("philly", num_jobs=40, seed=9))
+    assert [(j.arrival, j.duration, j.shape.dims) for j in a] == \
+        [(j.arrival, j.duration, j.shape.dims) for j in b]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
