@@ -55,12 +55,13 @@ def _configs_for(which: str):
 
 def _run_matrix(configs, runs: int, num_jobs: int, load: float,
                 seed0: int, workers, ckpt_dir, emit=print,
-                trace_kw: Dict = None):
+                trace_kw: Dict = None, fleet_size=None):
     tasks = make_tasks(configs, runs, num_jobs, load, seed0,
                        trace_kw=trace_kw)
-    runner = EvalRunner(checkpoint_dir=ckpt_dir, workers=workers, emit=emit)
+    runner = EvalRunner(checkpoint_dir=ckpt_dir, workers=workers,
+                        emit=emit, fleet_size=fleet_size)
     records = runner.run(tasks)
-    return aggregate_by_label(records), runner.last_stats
+    return aggregate_by_label(records), runner.last_stats, tasks
 
 
 def _legacy_aggs(aggs: Dict[str, Dict]) -> Dict[str, Dict]:
@@ -107,24 +108,24 @@ def _emit_fig4(f4: Dict, emit=print) -> None:
 
 def table1_jcr(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
                seed0: int = 100, emit=print) -> Dict[str, Dict]:
-    aggs, _ = _run_matrix(TABLE1_CONFIGS, runs, num_jobs, load, seed0,
-                          workers=0, ckpt_dir=None)
+    aggs, _, _ = _run_matrix(TABLE1_CONFIGS, runs, num_jobs, load, seed0,
+                             workers=0, ckpt_dir=None)
     _emit_table1(table1(aggs), runs, emit)
     return _legacy_aggs(aggs)
 
 
 def fig3_jct(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
              seed0: int = 100, emit=print) -> Dict[str, Dict]:
-    aggs, _ = _run_matrix(_configs_for("fig3"), runs, num_jobs, load,
-                          seed0, workers=0, ckpt_dir=None)
+    aggs, _, _ = _run_matrix(_configs_for("fig3"), runs, num_jobs, load,
+                             seed0, workers=0, ckpt_dir=None)
     _emit_fig3(fig3(aggs), emit)
     return _legacy_aggs(aggs)
 
 
 def fig4_utilization(runs: int = 3, num_jobs: int = 200, load: float = 1.5,
                      seed0: int = 100, emit=print) -> Dict[str, Dict]:
-    aggs, _ = _run_matrix(TABLE1_CONFIGS, runs, num_jobs, load, seed0,
-                          workers=0, ckpt_dir=None)
+    aggs, _, _ = _run_matrix(TABLE1_CONFIGS, runs, num_jobs, load, seed0,
+                             workers=0, ckpt_dir=None)
     f4 = fig4(aggs)
     _emit_fig4(f4, emit)
     return {label: {"agg": a["agg"], "cdf": a["cdf"]}
@@ -140,12 +141,26 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale averaging (100 runs, 500 jobs)")
     ap.add_argument("--workers", type=int, default=None,
-                    help="process-pool width (default: cpu count; "
-                         "<=1 runs inline)")
+                    help="process-pool width (default: auto-sized from "
+                         "os.cpu_count(); <=1 runs inline)")
+    ap.add_argument("--fleet-size", type=str, default="auto",
+                    help="simulators per in-process fleet (cooperative "
+                         "engine-call batching, repro.sim.fleet). "
+                         "'auto' fleets when a batched fitmask engine "
+                         "is selected and keeps the per-task path on "
+                         "the numpy host default; an integer forces "
+                         "fleets of that size; 0/1 disables")
     ap.add_argument("--ckpt-dir", type=str, default=DEFAULT_CKPT_DIR,
                     help="per-run checkpoint dir ('' disables)")
     ap.add_argument("--fresh", action="store_true",
                     help="ignore + remove existing checkpoints")
+    ap.add_argument("--prune-ckpt", action="store_true",
+                    help="after the run, drop checkpoints whose "
+                         "fingerprint is not in this invocation's task "
+                         "set (keeps the actions/cache store bounded)")
+    ap.add_argument("--ckpt-max-mb", type=int, default=None,
+                    help="with --prune-ckpt: also cap the surviving "
+                         "store size, evicting oldest first")
     ap.add_argument("--out", type=str, default="")
     ap.add_argument("--bench-out", type=str, default=None,
                     help="runner wall-clock stats JSON ('' disables; "
@@ -168,6 +183,13 @@ def main(argv=None) -> None:
                      f"have {sorted(TRACE_PRESETS)}")
         trace_kw = dict(TRACE_PRESETS[args.trace_preset])
     runs, n = (100, 500) if args.full else (args.runs, args.num_jobs)
+    # Resolve the pool width explicitly (rather than inside EvalRunner)
+    # so the bench artifact records the number actually used.
+    workers = (os.cpu_count() or 1) if args.workers is None \
+        else args.workers
+    fleet_size = args.fleet_size
+    if fleet_size not in ("auto",):
+        fleet_size = int(fleet_size)
     bench_out = args.bench_out
     if bench_out is None:
         bench_out = (os.path.join("experiments", "BENCH_paper_eval_full.json")
@@ -179,9 +201,16 @@ def main(argv=None) -> None:
             os.remove(path)
 
     t0 = time.time()
-    aggs, stats = _run_matrix(_configs_for(args.which), runs, n, args.load,
-                              args.seed0, args.workers, ckpt_dir,
-                              trace_kw=trace_kw)
+    aggs, stats, tasks = _run_matrix(_configs_for(args.which), runs, n,
+                                     args.load, args.seed0, workers,
+                                     ckpt_dir, trace_kw=trace_kw,
+                                     fleet_size=fleet_size)
+    if args.prune_ckpt and ckpt_dir and os.path.isdir(ckpt_dir):
+        from repro.eval import prune_checkpoints
+        max_bytes = (args.ckpt_max_mb * 1024 * 1024
+                     if args.ckpt_max_mb else None)
+        pstats = prune_checkpoints(ckpt_dir, tasks, max_bytes=max_bytes)
+        print(f"# checkpoint prune: {pstats}")
     results: Dict = {}
     if args.which in ("all", "table1"):
         t1 = table1(aggs)
@@ -208,11 +237,18 @@ def main(argv=None) -> None:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, default=float)
     if bench_out:
+        from repro.kernels.fitmask import ops
         bench = {
             "config": {"runs": runs, "num_jobs": n, "load": args.load,
                        "seed0": args.seed0, "which": args.which,
                        "full": args.full,
-                       "trace_preset": args.trace_preset},
+                       "trace_preset": args.trace_preset,
+                       "workers": workers,
+                       "fleet_size_arg": args.fleet_size,
+                       # the resolved size actually used (None: the
+                       # per-task path ran, e.g. auto on numpy host)
+                       "fleet_size": stats.get("fleet", {}).get("size"),
+                       "fitmask_engine": ops.default_engine_name()},
             "pool": stats,
             "wall_s": round(wall, 3),
             "per_policy_sim_s": {label: a["sim_s_total"]

@@ -157,6 +157,41 @@ def reconfig_table(path: str = "BENCH_reconfig.json") -> str:
     return "\n".join(lines)
 
 
+def fleet_table(path: str = "BENCH_fleet.json") -> str:
+    """Fleet-batched eval: broker-coalesced engine calls vs the
+    sequential single-sim path (parity + headline speedup)."""
+    with open(path) as f:
+        bench = json.load(f)
+    lines = []
+    par = bench.get("parity", {})
+    if par:
+        lines.append(
+            f"Parity: {par.get('runs')}x{par.get('num_jobs')}x"
+            f"{par.get('configs')} matrix identical="
+            f"{par.get('identical')} — sequential "
+            f"{par.get('sequential_s')}s vs fleet {par.get('fleet_s')}s "
+            f"on the numpy host engine ({par.get('numpy_speedup')}x)")
+    eng = bench.get("engine", {})
+    if eng:
+        b = eng.get("broker", {})
+        lines.append(
+            "\n| engine | sims | rounds | queries | sequential s | "
+            "fleet s | speedup | mean B | batched calls |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        lines.append(
+            f"| {eng.get('engine')} ({eng.get('grid')}, "
+            f"K={eng.get('k_boxes')}) | {eng.get('sims')} | "
+            f"{eng.get('rounds')} | {eng.get('queries')} | "
+            f"{eng.get('sequential_s')} | {eng.get('fleet_s')} | "
+            f"{eng.get('speedup')}x | {b.get('mean_grids_per_call')} | "
+            f"{b.get('batched_calls')}/{b.get('engine_calls')} |")
+    head = bench.get("headline", {})
+    if head:
+        lines.append(f"\nHeadline ({head.get('criterion')}): "
+                     f"{head.get('speedup')}x, pass={head.get('pass')}")
+    return "\n".join(lines)
+
+
 def bench_table(alloc_path: str = "BENCH_allocator.json",
                 eval_path: str = "BENCH_paper_eval.json") -> str:
     """Perf trajectory: placement-engine rates (BENCH_allocator.json)
@@ -199,7 +234,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
                     choices=["all", "dryrun", "roofline", "paper", "bench",
-                             "fitmask", "reconfig"])
+                             "fitmask", "reconfig", "fleet"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -223,6 +258,10 @@ def main() -> None:
             os.path.exists("BENCH_reconfig.json"):
         print("\n### Reconfiguration plan search (BENCH_reconfig.json)\n")
         print(reconfig_table())
+    if args.which in ("all", "fleet") and \
+            os.path.exists("BENCH_fleet.json"):
+        print("\n### Fleet-batched eval (BENCH_fleet.json)\n")
+        print(fleet_table())
 
 
 if __name__ == "__main__":

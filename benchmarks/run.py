@@ -25,11 +25,13 @@ def main() -> None:
     ap.add_argument("--skip-alloc", action="store_true")
     ap.add_argument("--skip-fitmask", action="store_true")
     ap.add_argument("--skip-reconfig", action="store_true")
+    ap.add_argument("--skip-fleet", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
-    from benchmarks import (allocator_bench, fitmask_bench, kernels_bench,
-                            paper_eval, reconfig_bench, roofline)
+    from benchmarks import (allocator_bench, fitmask_bench, fleet_bench,
+                            kernels_bench, paper_eval, reconfig_bench,
+                            roofline)
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -63,6 +65,19 @@ def main() -> None:
         else:
             reconfig_bench.main(["--quick", "--out",
                                  "experiments/BENCH_reconfig_quick.json"])
+
+    if not args.skip_fleet:
+        print("=" * 70)
+        print("## Fleet-batched eval benchmark (broker-coalesced vs "
+              "sequential)")
+        # Snapshot policy as the other benches: the tracked
+        # BENCH_fleet.json is the full parity+headline sweep; CI-sized
+        # runs smoke the quick variant into experiments/.
+        if args.full:
+            fleet_bench.main(["--out", "BENCH_fleet.json"])
+        else:
+            fleet_bench.main(["--quick", "--out",
+                              "experiments/BENCH_fleet_quick.json"])
 
     if not args.skip_fitmask:
         print("=" * 70)

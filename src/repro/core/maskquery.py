@@ -1,0 +1,96 @@
+"""Request/response interface between torus models and fitmask engines.
+
+The toruses used to call a resolved fitmask engine inline
+(``engine.multibox(...)`` at the query site). That shape made every
+simulator a private engine owner: batch-1 calls, one engine pass per
+simulator per epoch, and the multi-box kernel's grid-batch axis (the
+``B`` in ``(B, K, X, Y, Z)``) never saw more than one simulator's
+occupancy. This module splits the call path into an explicit
+request/response contract so a torus *submits* its per-epoch mask work
+to whatever client is installed:
+
+  * :class:`InlineMaskClient` — the default: answers immediately from
+    one engine (exactly the old inline behaviour, same arrays).
+  * ``repro.sim.fleet.QueryBroker`` — the fleet layer's client:
+    blocks the submitting simulator, coalesces concurrent requests
+    from many simulators, and answers them all with genuinely batched
+    engine calls (grids stacked on the B axis, candidate boxes
+    unioned on K).
+
+The contract is deliberately tiny — the two primitives every policy
+reduces to:
+
+  ``multibox(occ, boxes) -> (B, K, X, Y, Z) int32 numpy``
+      occ is a (B, X, Y, Z) bool grid batch; plane k is the full-grid
+      fit mask of ``boxes[k]`` (0 where the box overhangs or cannot
+      fit), in the *request's* box order.
+  ``free_counts(occ) -> (B,) int64 numpy``
+      free cells per grid.
+
+Both return host numpy arrays: callers index and cache them without
+engine-specific conversions. Answers are a pure function of
+``(occ[b], box)`` per plane, which is what makes any batching client
+bit-exact with the inline path (see DESIGN.md §Fleet-batched eval).
+
+The numpy *host* path (integral images built directly inside the
+torus) is still represented by ``None`` — it is not an engine call
+and stays free of this indirection unless a client is installed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+Box = Tuple[int, int, int]
+
+
+class MaskQueryClient:
+    """The request/response contract a torus submits mask work to."""
+
+    def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
+        """(B, X, Y, Z) occupancy x K boxes -> (B, K, X, Y, Z) int32."""
+        raise NotImplementedError
+
+    def free_counts(self, occ) -> np.ndarray:
+        """(B, X, Y, Z) occupancy -> (B,) int64 free-cell counts."""
+        raise NotImplementedError
+
+
+class InlineMaskClient(MaskQueryClient):
+    """Answers requests immediately from one fitmask engine — the
+    single-simulator path, byte-identical to the pre-client inline
+    calls (it is the same engine invocation plus the same numpy
+    conversion the call sites used to do)."""
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
+        return np.asarray(self.engine.multibox(occ, boxes))
+
+    def free_counts(self, occ) -> np.ndarray:
+        return np.asarray(self.engine.free_counts(occ)).astype(np.int64)
+
+
+# Inline clients are interned per engine instance: `client is` identity
+# then doubles as "same backend as last epoch" in the torus caches
+# (engines themselves are singletons in the registry).
+_INLINE: Dict[int, InlineMaskClient] = {}
+
+
+def resolve_mask_client(name: Optional[str]) -> Optional[InlineMaskClient]:
+    """Resolve an engine selection to an inline client: ``None`` for
+    the builtin numpy host path (which must stay free of indirection
+    and jax imports), a cached :class:`InlineMaskClient` otherwise.
+    ``name=None`` defers to the registry default
+    (``REPRO_FITMASK_ENGINE`` env var / ``set_default_engine``)."""
+    from repro.kernels.fitmask import ops  # numpy-only at import time
+    name = name or ops.default_engine_name()
+    if name == "numpy":
+        return None
+    engine = ops.get_engine(name)
+    client = _INLINE.get(id(engine))
+    if client is None:
+        client = _INLINE[id(engine)] = InlineMaskClient(engine)
+    return client

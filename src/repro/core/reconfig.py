@@ -52,7 +52,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import fitmask
-from . import torus as _torus
 from .folding import Fold, WrapFlags, verify_fold
 from .geometry import Coord, Dims, volume
 
@@ -270,6 +269,9 @@ class ReconfigTorus:
         # None defers to REPRO_FITMASK_ENGINE / the registry default;
         # "numpy" keeps the pure-host path below.
         self.fitmask_engine = fitmask_engine
+        # Installed request/response client (repro.core.maskquery); the
+        # fleet layer points many clusters at one shared query broker.
+        self.mask_client = None
         # If True, a cube chained into a multi-cube job is exclusively
         # owned by it (strands leftover XPUs). Default False: the OCS is
         # per-face-position, so leftover sub-blocks stay usable — this
@@ -295,7 +297,7 @@ class ReconfigTorus:
         self._busy = 0
         self._cache_epoch = -1
         self._dirty: Optional[set] = None               # None = rebuild all
-        self._engine = None                             # resolved per refresh
+        self._engine = None           # mask client resolved per refresh
         self._ii: Optional[np.ndarray] = None           # batched integral image
         self._free_cnt: Optional[np.ndarray] = None     # (C,) free cells/cube
         self._cube_empty: Optional[np.ndarray] = None   # (C,) bool
@@ -312,6 +314,24 @@ class ReconfigTorus:
         self._shape_masks: Dict[Dims, np.ndarray] = {}
 
     # ------------------------------------------------------------------
+    def set_mask_client(self, client) -> None:
+        """Install a request/response mask client (e.g. the fleet
+        layer's query broker): every sub-block freeness / free-count
+        query is *submitted* to it instead of computed inline, even
+        when the registry default is the numpy host engine. ``None``
+        restores per-query engine resolution."""
+        self.mask_client = client
+        self._cache_epoch = -1     # cached masks belong to the old route
+        self._dirty = None
+
+    def _resolve_client(self):
+        """The client this cluster submits mask work to (None = the
+        numpy host integral-image path)."""
+        if self.mask_client is not None:
+            return self.mask_client
+        from .maskquery import resolve_mask_client
+        return resolve_mask_client(self.fitmask_engine)
+
     def bump_epoch(self) -> None:
         """Invalidate cached occupancy-derived state (call after any
         direct mutation of ``occ``/``dedicated``)."""
@@ -336,16 +356,16 @@ class ReconfigTorus:
         if self._cache_epoch == self._epoch:
             return
         n3 = self.cube_n ** 3
-        engine = _torus.resolve_fitmask_engine(self.fitmask_engine)
+        client = self._resolve_client()
         dirty = self._dirty
         partial = (dirty is not None and self._cache_epoch >= 0
-                   and engine is self._engine
+                   and client is self._engine
                    and len(dirty) * 4 <= self.num_cubes)
         if partial:
             d = np.fromiter(dirty, dtype=np.int64, count=len(dirty))
             d.sort()
             if d.size:
-                if engine is None:
+                if client is None:
                     self._ii[d] = fitmask.integral_image(self.occ[d])
                     self._free_cnt[d] = n3 - self._ii[d, -1, -1, -1]
                     for s, m in self._shape_masks.items():
@@ -355,23 +375,20 @@ class ReconfigTorus:
                             m[d, :w.shape[1], :w.shape[2], :w.shape[3]] = \
                                 w == 0
                 else:
-                    self._free_cnt[d] = np.asarray(
-                        engine.free_counts(self.occ[d])).astype(np.int64)
+                    self._free_cnt[d] = client.free_counts(self.occ[d])
                     if self._shape_masks:
                         shapes = sorted(self._shape_masks)
-                        out = np.asarray(engine.multibox(self.occ[d],
-                                                         shapes))
+                        out = client.multibox(self.occ[d], shapes)
                         for k, s in enumerate(shapes):
                             self._shape_masks[s][d] = out[:, k] != 0
                 self._cube_empty[d] = self._free_cnt[d] == n3
         else:
-            if engine is None:
+            if client is None:
                 self._ii = fitmask.batched_integral_image(self.occ)
                 self._free_cnt = n3 - self._ii[:, -1, -1, -1]
             else:
                 self._ii = None
-                self._free_cnt = np.asarray(
-                    engine.free_counts(self.occ)).astype(np.int64)
+                self._free_cnt = client.free_counts(self.occ)
             self._cube_empty = self._free_cnt == n3
             self._shape_masks = {}
         # Best-fit ordering: least leftover first, non-empty cubes break
@@ -386,7 +403,7 @@ class ReconfigTorus:
         self._n_nonempty_elig = int(
             (~self._cube_empty & (self.dedicated < 0)).sum())
         self._elig_order = None
-        self._engine = engine
+        self._engine = client
         self._sorted_cands = {}
         self._dirty = set()
         self._cache_epoch = self._epoch
@@ -462,13 +479,15 @@ class ReconfigTorus:
                     m[:, :w.shape[1], :w.shape[2], :w.shape[3]] = w == 0
                 self._shape_masks[shape] = m
             else:
-                # One multi-box pass answers every piece shape seen so
-                # far for ALL cubes of this epoch.
+                # One multi-box pass answers every seen-but-uncomputed
+                # shape for ALL cubes; masks already cached this epoch
+                # are merged with, not recomputed.
                 self._seen_shapes.add(shape)
-                shapes = sorted(self._seen_shapes)
-                out = np.asarray(self._engine.multibox(self.occ, shapes))
-                self._shape_masks = {
-                    s: out[:, k] != 0 for k, s in enumerate(shapes)}
+                missing = sorted(s for s in self._seen_shapes
+                                 if s not in self._shape_masks)
+                out = self._engine.multibox(self.occ, missing)
+                for k, s in enumerate(missing):
+                    self._shape_masks[s] = out[:, k] != 0
                 m = self._shape_masks[shape]
         return m
 

@@ -14,6 +14,7 @@ from typing import Dict, FrozenSet, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import maskquery
 from .geometry import Coord, Dims, is_torus_neighbor, iter_box, volume
 
 Link = Tuple[Coord, Coord]
@@ -49,11 +50,8 @@ def resolve_fitmask_engine(name: Optional[str]):
     env var / ``set_default_engine``). Returns ``None`` for ``numpy`` —
     the builtin host integral-image fast path, which must stay free of
     jax imports — and the engine object otherwise."""
-    from repro.kernels.fitmask import ops  # numpy-only at import time
-    name = name or ops.default_engine_name()
-    if name == "numpy":
-        return None
-    return ops.get_engine(name)
+    client = maskquery.resolve_mask_client(name)
+    return None if client is None else client.engine
 
 
 class StaticTorus:
@@ -68,6 +66,9 @@ class StaticTorus:
     def __init__(self, dims: Dims, fitmask_engine: Optional[str] = None):
         self.dims: Dims = tuple(int(d) for d in dims)  # type: ignore[assignment]
         self.fitmask_engine = fitmask_engine
+        # Installed request/response client (repro.core.maskquery).
+        # None: resolve per query (engine registry / numpy host path).
+        self.mask_client: Optional[maskquery.MaskQueryClient] = None
         self.occ = np.zeros(self.dims, dtype=bool)
         self.owner = np.full(self.dims, -1, dtype=np.int64)
         self.link_owner: Dict[Link, int] = {}
@@ -90,6 +91,24 @@ class StaticTorus:
         self._box_masks: Dict[Dims, np.ndarray] = {}
 
     # ------------------------------------------------------------------
+    def set_mask_client(self, client) -> None:
+        """Install a request/response mask client (e.g. the fleet
+        layer's query broker). With a client installed every mask
+        query rides the engine path — *submitted* to the client
+        instead of computed inline — even when the registry default
+        is the numpy host engine. ``None`` restores per-query engine
+        resolution."""
+        self.mask_client = client
+        self._fit_epoch = -1   # cached masks belong to the old route
+
+    def _resolve_client(self) -> Optional[maskquery.MaskQueryClient]:
+        """The client this torus submits mask work to: the installed
+        one, else the engine registry's inline client, else ``None``
+        (the numpy host integral-image path below)."""
+        if self.mask_client is not None:
+            return self.mask_client
+        return maskquery.resolve_mask_client(self.fitmask_engine)
+
     def bump_epoch(self) -> None:
         """Invalidate cached occupancy-derived state (call after any
         direct mutation of ``occ``)."""
@@ -119,8 +138,8 @@ class StaticTorus:
         by a single multi-box pass per epoch (one VMEM integral image
         shared across the whole candidate set); the numpy path extracts
         windows from the shared host integral image."""
-        engine = resolve_fitmask_engine(self.fitmask_engine)
-        if engine is None:
+        client = self._resolve_client()
+        if client is None:
             from . import fitmask
             m = np.zeros(self.dims, dtype=bool)
             s = fitmask.window_sums_from_ii(self._host_ii(), box)
@@ -129,25 +148,36 @@ class StaticTorus:
             return m
         self._fit_state()  # epoch roll also resets _box_masks
         if box not in self._box_masks:
+            # No prefetch declared this box: answer every seen-but-
+            # uncomputed box in one pass (first miss of an epoch fills
+            # the whole set; prefetched masks are never recomputed).
             self._seen_boxes.add(box)
-            boxes = sorted(self._seen_boxes)
-            out = np.asarray(engine.multibox(self.occ[None], boxes))[0]
-            self._box_masks = {b: out[k] != 0 for k, b in enumerate(boxes)}
+            missing = sorted(b for b in self._seen_boxes
+                             if b not in self._box_masks)
+            out = client.multibox(self.occ[None], missing)[0]
+            for k, b in enumerate(missing):
+                self._box_masks[b] = out[k] != 0
         return self._box_masks[box]
 
     def prefetch_boxes(self, boxes) -> None:
         """Declare an allocator step's candidate boxes up front so an
-        accelerator engine answers them all in one multi-box pass. The
-        numpy path is already amortized by the shared integral image,
-        so this is a no-op there."""
-        if resolve_fitmask_engine(self.fitmask_engine) is None:
+        accelerator engine answers them all in one multi-box pass —
+        exactly the step's missing boxes, not the historical union
+        (stale candidates from other job shapes would only pad the K
+        axis with work nobody reads this epoch). The numpy host path
+        is already amortized by the shared integral image, so this is
+        a no-op there."""
+        client = self._resolve_client()
+        if client is None:
             return
         self._fit_state()
         fresh = [tuple(int(v) for v in b) for b in boxes]
-        if any(b not in self._box_masks for b in fresh):
-            self._seen_boxes.update(fresh)
-            self._box_masks = {}          # recompute the union in one pass
-            self._fit_mask_for(fresh[0])
+        self._seen_boxes.update(fresh)
+        missing = sorted(b for b in set(fresh) if b not in self._box_masks)
+        if missing:
+            out = client.multibox(self.occ[None], missing)[0]
+            for k, b in enumerate(missing):
+                self._box_masks[b] = out[k] != 0
 
     # ------------------------------------------------------------------
     @property

@@ -17,10 +17,12 @@ Layout:
 from .aggregate import (PAPER_FIG3_RATIOS, PAPER_FIG4_DELTAS,  # noqa: F401
                         PAPER_TABLE1, aggregate_by_label, fig3, fig4, table1)
 from .runner import (EvalRunner, EvalTask, derive_seed,  # noqa: F401
-                     make_tasks, run_task)
+                     make_tasks, prune_checkpoints, run_fleet_tasks,
+                     run_task)
 
 __all__ = [
     "EvalRunner", "EvalTask", "derive_seed", "make_tasks", "run_task",
+    "run_fleet_tasks", "prune_checkpoints",
     "aggregate_by_label", "table1", "fig3", "fig4",
     "PAPER_TABLE1", "PAPER_FIG3_RATIOS", "PAPER_FIG4_DELTAS",
 ]

@@ -1,4 +1,5 @@
-"""Process-pool evaluation runner with per-run JSON checkpointing.
+"""Two-level evaluation runner: process pool x in-process fleets,
+with per-run JSON checkpointing.
 
 A unit of work (:class:`EvalTask`) is one seeded simulator run of one
 policy configuration. Tasks are independent, so the runner fans them
@@ -6,6 +7,16 @@ out across worker processes; every finished task is checkpointed as one
 JSON file, keyed by a fingerprint of the task's full configuration, so
 an interrupted sweep resumes from the completed subset instead of
 restarting.
+
+With ``fleet_size`` set, each worker runs its slice of the matrix as a
+cooperatively-scheduled *fleet* (``repro.sim.fleet``): the simulators'
+fitmask/free-counts queries coalesce through a shared query broker
+into genuinely batched engine calls (grids stacked on the multibox
+``B`` axis). Chunks group tasks whose grids share a cell shape so the
+broker actually gets to stack them. Records and checkpoints are
+byte-identical to the per-task path (the broker is bit-exact; the
+per-task path is retained below as the parity oracle and for
+``fleet_size=None``).
 
 Checkpoint layout: files are bucketed into fingerprint-prefix
 subdirectories (``<dir>/<fp[:2]>/<name>.json``, 256 shards) so
@@ -76,6 +87,10 @@ class EvalTask:
 
 SHARD_CHARS = 2   # 16^2 = 256 buckets; plenty below any fs dir limit
 
+# <slug>__r<idx>__<16-hex-fingerprint>.json — what checkpoint_name()
+# emits; prune only ever deletes files matching this.
+CKPT_NAME_RE = re.compile(r"__r\d+__([0-9a-f]{16})\.json$")
+
 
 def shard_dir(checkpoint_dir: str, fingerprint: str) -> str:
     """Fingerprint-prefix bucket for one checkpoint."""
@@ -88,6 +103,67 @@ def iter_checkpoints(checkpoint_dir: str):
         for name in files:
             if name.endswith(".json"):
                 yield os.path.join(root, name)
+
+
+def save_checkpoint(checkpoint_dir: str, task: "EvalTask",
+                    rec: Dict) -> None:
+    """Atomically write one task's record into the (sharded) store."""
+    path = os.path.join(shard_dir(checkpoint_dir, task.fingerprint()),
+                        task.checkpoint_name())
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f)
+    os.replace(tmp, path)   # atomic: a checkpoint is whole or absent
+
+
+def prune_checkpoints(checkpoint_dir: str, tasks: Sequence["EvalTask"],
+                      max_bytes: Optional[int] = None) -> Dict:
+    """Compact a checkpoint store so the actions/cache entry backing
+    the scheduled full sweep stops growing unboundedly: drop every
+    checkpoint whose fingerprint is absent from the current task set
+    (stale configs, old seeds, bumped job counts), then optionally cap
+    the survivors' total size, evicting oldest-mtime first. Works on
+    sharded and legacy-flat stores alike (fingerprints are parsed
+    from the file name, which both layouts share); files that don't
+    look like checkpoints are never touched, and emptied shard
+    directories are removed."""
+    keep = {t.fingerprint() for t in tasks}
+    stats = {"scanned": 0, "removed": 0, "kept": 0, "bytes_freed": 0}
+    survivors = []
+    for path in list(iter_checkpoints(checkpoint_dir)):
+        m = CKPT_NAME_RE.search(os.path.basename(path))
+        if m is None:
+            continue   # not ours — leave foreign files alone
+        stats["scanned"] += 1
+        if m.group(1) in keep:
+            survivors.append(path)
+        else:
+            stats["bytes_freed"] += os.path.getsize(path)
+            os.remove(path)
+            stats["removed"] += 1
+    if max_bytes is not None:
+        survivors.sort(key=os.path.getmtime, reverse=True)  # newest first
+        total = 0
+        evicting = False
+        for path in survivors:
+            size = os.path.getsize(path)
+            # Strictly oldest-first: once the cumulative (newest-first)
+            # budget is exceeded, everything older goes too — never
+            # keep an older file in place of an evicted newer one.
+            evicting = evicting or total + size > max_bytes
+            if evicting:
+                os.remove(path)
+                stats["removed"] += 1
+                stats["bytes_freed"] += size
+            else:
+                total += size
+    stats["kept"] = stats["scanned"] - stats["removed"]
+    for name in os.listdir(checkpoint_dir):
+        sub = os.path.join(checkpoint_dir, name)
+        if os.path.isdir(sub) and not os.listdir(sub):
+            os.rmdir(sub)
+    return stats
 
 
 def make_tasks(configs: Sequence[Tuple[str, str, dict]], runs: int,
@@ -105,8 +181,13 @@ def make_tasks(configs: Sequence[Tuple[str, str, dict]], runs: int,
     ]
 
 
-def run_task(task: EvalTask) -> Dict:
+def run_task(task: EvalTask, mask_client=None) -> Dict:
     """Execute one task (worker-side) and return its record.
+
+    ``mask_client`` routes the policy's fitmask/free-counts queries
+    through a request/response client (the fleet path installs its
+    query broker here); ``None`` keeps the inline engine path. Either
+    way the record is byte-identical apart from ``sim_s``.
 
     Imports are local so that pool workers forked before the simulator
     stack is loaded stay cheap, and so this module stays importable in
@@ -121,6 +202,9 @@ def run_task(task: EvalTask) -> Dict:
                       target_load=task.load, **task.trace_kw)
     jobs = generate_trace(cfg)
     policy = make_policy(task.policy, **task.policy_kw)
+    if mask_client is not None:
+        from repro.sim.fleet import install_mask_client
+        install_mask_client(policy, mask_client)
     t0 = time.perf_counter()
     res = Simulator(policy, jobs, **task.sim_kw).run()
     wall = time.perf_counter() - t0
@@ -137,6 +221,70 @@ def run_task(task: EvalTask) -> Dict:
     }
 
 
+# -- fleet path --------------------------------------------------------
+
+def task_grid_bucket(task: EvalTask) -> Tuple:
+    """Cell shape of the occupancy grids this task's mask queries
+    carry. The query broker can only stack same-shape grids on the
+    multibox B axis, so fleet chunks group tasks by this key
+    (mirrors the ``make_policy`` defaults)."""
+    kw = task.policy_kw
+    if task.policy in ("firstfit", "folding"):
+        return ("static", tuple(int(d) for d in kw.get("dims",
+                                                       (16, 16, 16))))
+    return ("cube", int(kw.get("cube_n", 4)))
+
+
+def make_fleet_chunks(tasks: Sequence[EvalTask], pending: Sequence[int],
+                      fleet_size: int) -> List[List[int]]:
+    """Group pending task indices into fleets of at most
+    ``fleet_size``, never mixing grid buckets within one fleet (a
+    mixed fleet is *correct* — the broker buckets again at flush time
+    — it just coalesces worse). Stable within a bucket, so the
+    configs x runs task order keeps same-config runs together."""
+    by_bucket: Dict[Tuple, List[int]] = {}
+    for i in pending:
+        by_bucket.setdefault(task_grid_bucket(tasks[i]), []).append(i)
+    chunks = []
+    for _, idxs in sorted(by_bucket.items()):
+        chunks.extend(idxs[o:o + fleet_size]
+                      for o in range(0, len(idxs), fleet_size))
+    return chunks
+
+
+def run_fleet_tasks(tasks: Sequence[EvalTask],
+                    checkpoint_dir: Optional[str] = None,
+                    engine=None) -> Tuple[List[Dict], Dict]:
+    """Worker-side: run a chunk of tasks as one cooperative fleet
+    sharing a query broker (``repro.sim.fleet``). Each simulator
+    checkpoints itself the moment it finishes, so per-run resume
+    granularity survives a worker dying mid-fleet. Returns the
+    records (task order) and the broker's coalescing stats.
+
+    ``engine`` selects the broker's engine (registry name or
+    instance); the default follows the registry's selection order,
+    matching what the per-task path would have resolved. Note the
+    broker is the fleet's single engine: a per-task
+    ``fitmask_engine`` in ``policy_kw`` is overridden on this path
+    (answers are bit-identical across engines, so records don't
+    change — only where the masks get computed).
+    """
+    from repro.sim.fleet import Fleet
+
+    fleet = Fleet(engine)
+
+    def unit(task: EvalTask):
+        def go(broker):
+            rec = run_task(task, mask_client=broker)
+            if checkpoint_dir:
+                save_checkpoint(checkpoint_dir, task, rec)
+            return rec
+        return go
+
+    records = fleet.run([unit(t) for t in tasks])
+    return records, fleet.broker.stats.as_dict()
+
+
 class EvalRunner:
     """Fan tasks across a process pool, checkpointing each result.
 
@@ -145,13 +293,25 @@ class EvalRunner:
     ``checkpoint_dir`` set, completed tasks are skipped on re-run when
     their stored fingerprint matches the requested configuration;
     mismatching or unreadable checkpoints are ignored and re-executed.
+
+    ``fleet_size`` turns on the second pool level: pending tasks are
+    chunked into in-process fleets of at most that many simulators
+    (``"auto"`` sizes chunks from the pending count and worker width,
+    keeping several chunks per worker for load balance), and each
+    chunk's mask queries ride one shared query broker as batched
+    engine calls. ``None``/``0``/``1`` keeps the per-task path —
+    records are byte-identical either way. ``fleet_engine`` picks the
+    brokers' engine (default: the registry's selection order).
     """
 
     def __init__(self, checkpoint_dir: Optional[str] = None,
-                 workers: Optional[int] = None, emit=None):
+                 workers: Optional[int] = None, emit=None,
+                 fleet_size=None, fleet_engine: Optional[str] = None):
         self.checkpoint_dir = checkpoint_dir
         self.workers = os.cpu_count() if workers is None else workers
         self.emit = emit or (lambda *a: None)
+        self.fleet_size = fleet_size
+        self.fleet_engine = fleet_engine
         self.last_stats: Dict = {}
 
     # -- checkpoint store ---------------------------------------------
@@ -194,16 +354,35 @@ class EvalRunner:
         return rec
 
     def _save_checkpoint(self, task: EvalTask, rec: Dict) -> None:
-        path = self._ckpt_path(task)
-        if not path:
-            return
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(rec, f)
-        os.replace(tmp, path)   # atomic: a checkpoint is whole or absent
+        if self.checkpoint_dir:
+            save_checkpoint(self.checkpoint_dir, task, rec)
 
     # -- execution -----------------------------------------------------
+    def _resolve_fleet_size(self, n_pending: int) -> Optional[int]:
+        fs = self.fleet_size
+        if fs in (None, 0, 1):
+            return None
+        if fs == "auto":
+            # Engine-aware: fleets exist to batch *engine* calls, and
+            # only pay off where a call carries real dispatch cost. On
+            # the host numpy path per-task is measurably faster (the
+            # parity section of BENCH_fleet.json tracks the delta), so
+            # auto keeps it; an explicit integer always forces fleets.
+            engine = self.fleet_engine
+            name = (getattr(engine, "name", None)
+                    if hasattr(engine, "multibox") else engine)
+            if name is None:
+                from repro.kernels.fitmask import ops
+                name = ops.default_engine_name()
+            if name == "numpy":
+                return None
+            # Several chunks per worker (rebalancing headroom for the
+            # wildly different per-policy sim costs), batching benefit
+            # saturating around 8 simulators per broker round.
+            workers = max(1, self.workers or 1)
+            return max(2, min(8, -(-n_pending // (4 * workers))))
+        return int(fs)
+
     def run(self, tasks: Sequence[EvalTask]) -> List[Dict]:
         """Run the matrix; returns records ordered like ``tasks``."""
         t0 = time.perf_counter()
@@ -220,7 +399,10 @@ class EvalRunner:
             self.emit(f"# resume: {reused}/{len(tasks)} tasks "
                       "from checkpoints")
 
-        if pending:
+        fleet_size = self._resolve_fleet_size(len(pending))
+        if pending and fleet_size:
+            self._run_fleets(tasks, pending, records, fleet_size)
+        elif pending:
             if self.workers and self.workers > 1:
                 self._run_pool(tasks, pending, records)
             else:
@@ -237,7 +419,65 @@ class EvalRunner:
             "sim_s_total": round(sum(r["sim_s"] for r in records
                                      if r is not None), 3),
         }
+        if pending and fleet_size:
+            self.last_stats["fleet"] = self._fleet_stats
         return [r for r in records if r is not None]
+
+    def _run_fleets(self, tasks: Sequence[EvalTask], pending: List[int],
+                    records: List[Optional[Dict]],
+                    fleet_size: int) -> None:
+        """Two-level pool: fan task chunks across worker processes,
+        each chunk running as one cooperatively-batched fleet.
+        Checkpoints are written worker-side as each simulator
+        finishes, so resume granularity stays per-run."""
+        chunks = make_fleet_chunks(tasks, pending, fleet_size)
+        broker_totals: List[Dict] = []
+
+        def account(chunk: List[int], result) -> None:
+            recs, stats = result
+            for i, rec in zip(chunk, recs):
+                records[i] = rec
+            broker_totals.append(stats)
+            self.emit(f"# eval fleet {len(broker_totals)}/{len(chunks)}: "
+                      f"{len(chunk)} sims "
+                      f"({sum(r['sim_s'] for r in recs):.1f}s sim, "
+                      f"B~{stats['mean_grids_per_call']})")
+
+        if self.workers and self.workers > 1 and len(chunks) > 1:
+            import multiprocessing as mp
+            ctx = (mp.get_context("fork")
+                   if "fork" in mp.get_all_start_methods() else None)
+            with ProcessPoolExecutor(max_workers=self.workers,
+                                     mp_context=ctx) as pool:
+                futs = {pool.submit(run_fleet_tasks,
+                                    [tasks[i] for i in chunk],
+                                    self.checkpoint_dir,
+                                    self.fleet_engine): chunk
+                        for chunk in chunks}
+                remaining = set(futs)
+                while remaining:
+                    finished, remaining = wait(remaining,
+                                               return_when=FIRST_COMPLETED)
+                    for fut in finished:
+                        account(futs[fut], fut.result())
+        else:
+            for chunk in chunks:
+                account(chunk, run_fleet_tasks(
+                    [tasks[i] for i in chunk], self.checkpoint_dir,
+                    self.fleet_engine))
+
+        agg = {k: sum(s[k] for s in broker_totals)
+               for k in ("requests", "flushes", "engine_calls",
+                         "batched_calls", "grids")}
+        agg["max_grids"] = max((s["max_grids"] for s in broker_totals),
+                               default=0)
+        agg["max_coalesced"] = max((s["max_coalesced"]
+                                    for s in broker_totals), default=0)
+        agg["mean_grids_per_call"] = (
+            round(agg["grids"] / agg["engine_calls"], 2)
+            if agg["engine_calls"] else None)
+        self._fleet_stats = {"size": fleet_size, "fleets": len(chunks),
+                             "broker": agg}
 
     def _run_pool(self, tasks: Sequence[EvalTask], pending: List[int],
                   records: List[Optional[Dict]]) -> None:

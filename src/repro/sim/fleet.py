@@ -1,0 +1,299 @@
+"""Fleet simulation layer: one engine, many simulators.
+
+The eval harness runs matrices of independent seeded simulations
+(runs x policies x seeds). Driven naively, each :class:`Simulator`
+owns its engine call path and issues batch-1 fitmask queries — the
+multi-box kernel's grid-batch axis (the ``B`` of ``(B, K, X, Y, Z)``)
+never sees more than one simulator's occupancy, so the very
+amortization that makes the kernel fast goes unused in production.
+
+This module runs many simulators *concurrently inside one process* as
+cooperatively-scheduled steppers and funnels their per-epoch mask work
+through a shared :class:`QueryBroker`:
+
+  * Each simulator runs on its own thread. Simulation itself is plain
+    python/numpy (GIL-serialized — process pools provide CPU
+    parallelism one level up, see ``repro.eval.runner``); the threads
+    exist so a simulator can *block inside its placement hot path*,
+    exactly at the point where it used to call the engine inline.
+  * A blocked simulator's query parks in the broker. When every live
+    simulator is parked (nobody runnable — the cooperative step
+    boundary), the last to arrive becomes the flush leader and answers
+    the whole round with genuinely batched engine calls.
+  * Coalescing rules: requests are bucketed by grid cell shape (a
+    16^3 static torus never stacks with 4^3 cubes), same-bucket grids
+    are concatenated on the B axis, and candidate box sets are
+    unioned on K — each request gets exactly its own planes back, in
+    its own box order.
+
+Why schedules stay byte-identical to the single-sim path: every
+``multibox``/``free_counts`` answer is a pure per-grid-per-box
+function of the submitted occupancy — batching concatenates inputs
+and slices outputs, it never mixes grids — so a simulator cannot
+observe whether its query was answered solo or in a round of twenty
+(parity-tested in ``tests/test_fleet.py``; the per-sim epoch caches
+in the torus models are untouched and keep deduplicating queries
+before they ever reach the broker).
+
+The broker implements the ``repro.core.maskquery`` client contract,
+so installing it is one call per policy (:func:`install_mask_client`).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.maskquery import Box, MaskQueryClient
+
+
+@dataclass
+class BrokerStats:
+    """Coalescing counters (the fleet bench asserts batching really
+    happened: ``batched_calls > 0`` and ``mean_grids_per_call > 1``)."""
+
+    requests: int = 0        # queries submitted by simulators
+    flushes: int = 0         # cooperative rounds answered
+    engine_calls: int = 0    # engine invocations actually issued
+    batched_calls: int = 0   # engine calls coalescing > 1 request
+    grids: int = 0           # total grids stacked on the B axis
+    max_grids: int = 0       # largest single-call B
+    max_coalesced: int = 0   # most requests answered by one call
+
+    def record_call(self, n_requests: int, n_grids: int) -> None:
+        self.engine_calls += 1
+        self.grids += n_grids
+        self.max_grids = max(self.max_grids, n_grids)
+        self.max_coalesced = max(self.max_coalesced, n_requests)
+        if n_requests > 1:
+            self.batched_calls += 1
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dict(self.__dict__)
+        d["mean_grids_per_call"] = (
+            round(self.grids / self.engine_calls, 2)
+            if self.engine_calls else None)
+        return d
+
+
+class _Request:
+    __slots__ = ("kind", "occ", "boxes", "result", "error")
+
+    def __init__(self, kind: str, occ: np.ndarray,
+                 boxes: Optional[Tuple[Box, ...]] = None):
+        self.kind = kind
+        self.occ = occ
+        self.boxes = boxes
+        self.result: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+
+
+class QueryBroker(MaskQueryClient):
+    """Coalesces mask queries from concurrently running simulators
+    into batched engine calls.
+
+    Implements the :class:`~repro.core.maskquery.MaskQueryClient`
+    contract, so a torus submits work to it exactly as it would to an
+    inline client — the submitting thread just blocks until the round
+    is answered. With no registered simulators (or only one live), a
+    request flushes immediately: a broker is safe to use solo.
+
+    ``engine`` is a registry name (``numpy``/``jax``/``pallas``/
+    ``ref``), an engine instance, or ``None`` for the registry default
+    — note the fleet path always rides an *engine*, there is no
+    brokered variant of the in-torus host integral-image path (the
+    numpy engine is the same arithmetic, batched).
+
+    ``pad_b`` pads each stacked batch with empty grids up to the next
+    power of two, so compiled engines see a handful of stable B shapes
+    instead of retracing/recompiling every jitted program per distinct
+    flush size (coalescing round sizes vary as simulators drift apart
+    — without padding a jax-backed fleet spends its time in XLA
+    compiles). Padding rows are sliced off before answers are handed
+    back, so results are unchanged. Default ``"auto"``: pad for every
+    engine except host ``numpy``, where extra grids are pure waste.
+    """
+
+    def __init__(self, engine=None, pad_b="auto"):
+        from repro.kernels.fitmask import ops
+        self.engine = (engine if hasattr(engine, "multibox")
+                       else ops.get_engine(engine))
+        self.pad_b = (getattr(self.engine, "name", None) != "numpy"
+                      if pad_b == "auto" else bool(pad_b))
+        # With a hint (the fleet sets its simulator count), batches at
+        # or below it pad exactly to it: single-grid-per-sim rounds —
+        # the whole static-torus side — then share ONE compiled shape
+        # instead of one per power of two.
+        self.pad_hint: Optional[int] = None
+        self._cv = threading.Condition()
+        self._active = 0
+        self._pending: List[_Request] = []
+        self.stats = BrokerStats()
+
+    # -- simulator lifecycle ------------------------------------------
+    def register(self) -> None:
+        """Declare one more live simulator (call before it starts)."""
+        with self._cv:
+            self._active += 1
+
+    def deactivate(self) -> None:
+        """A simulator finished (or died): it submits no further
+        queries. If everyone still live is already parked, their round
+        must flush now — nobody else will trigger it."""
+        with self._cv:
+            self._active -= 1
+            if self._pending and len(self._pending) >= self._active:
+                self._flush_locked()
+
+    # -- MaskQueryClient contract -------------------------------------
+    def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
+        boxes = tuple(tuple(int(v) for v in b) for b in boxes)
+        return self._submit(_Request("multibox", np.asarray(occ), boxes))
+
+    def free_counts(self, occ) -> np.ndarray:
+        return self._submit(_Request("free_counts", np.asarray(occ)))
+
+    def _submit(self, req: _Request) -> np.ndarray:
+        if req.occ.ndim != 4:
+            raise ValueError("broker expects (B, X, Y, Z) occupancy, "
+                             f"got shape {req.occ.shape}")
+        with self._cv:
+            self._pending.append(req)
+            self.stats.requests += 1
+            if len(self._pending) >= self._active:
+                # Nobody left runnable: this thread is the flush leader.
+                self._flush_locked()
+            while req.result is None and req.error is None:
+                self._cv.wait()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # -- coalescing ----------------------------------------------------
+    def _flush_locked(self) -> None:
+        batch, self._pending = self._pending, []
+        self.stats.flushes += 1
+        try:
+            self._answer(batch)
+        except BaseException as e:  # noqa: BLE001 — must wake waiters
+            for r in batch:
+                if r.result is None:
+                    r.error = e
+        self._cv.notify_all()
+
+    def _answer(self, batch: List[_Request]) -> None:
+        for kind in ("multibox", "free_counts"):
+            reqs = [r for r in batch if r.kind == kind]
+            # Bucket by grid cell shape: only same-shape grids can
+            # share an engine pass.
+            by_cell: Dict[Tuple[int, ...], List[_Request]] = {}
+            for r in reqs:
+                by_cell.setdefault(r.occ.shape[1:], []).append(r)
+            for group in by_cell.values():
+                if kind == "multibox":
+                    self._answer_multibox(group)
+                else:
+                    self._answer_free_counts(group)
+
+    def _stack(self, group: List[_Request]) -> np.ndarray:
+        occs = [r.occ for r in group]
+        b = sum(o.shape[0] for o in occs)
+        if self.pad_b:
+            if self.pad_hint and b <= self.pad_hint:
+                target = self.pad_hint
+            else:
+                target = 1 << (b - 1).bit_length()   # next power of two
+            if target > b:
+                occs.append(np.zeros((target - b,) + occs[0].shape[1:],
+                                     dtype=occs[0].dtype))
+        if len(occs) == 1:
+            return occs[0]
+        return np.concatenate(occs, axis=0)
+
+    def _answer_multibox(self, group: List[_Request]) -> None:
+        union = tuple(sorted({b for r in group for b in r.boxes}))
+        occ = self._stack(group)
+        out = np.asarray(self.engine.multibox(occ, union))
+        self.stats.record_call(len(group),
+                              sum(r.occ.shape[0] for r in group))
+        kidx = {b: k for k, b in enumerate(union)}
+        lo = 0
+        for r in group:
+            hi = lo + r.occ.shape[0]
+            sub = out[lo:hi]
+            if r.boxes != union:   # this request's planes, its order
+                sub = sub[:, [kidx[b] for b in r.boxes]]
+            r.result = sub
+            lo = hi
+
+    def _answer_free_counts(self, group: List[_Request]) -> None:
+        occ = self._stack(group)
+        out = np.asarray(self.engine.free_counts(occ)).astype(np.int64)
+        self.stats.record_call(len(group),
+                              sum(r.occ.shape[0] for r in group))
+        lo = 0
+        for r in group:
+            hi = lo + r.occ.shape[0]
+            r.result = out[lo:hi]
+            lo = hi
+
+
+def install_mask_client(policy, client) -> None:
+    """Point a placement policy's cluster model at a mask client.
+    Policies expose their model as ``.torus`` (static) or ``.cluster``
+    (reconfigurable); both models implement ``set_mask_client``."""
+    model = getattr(policy, "torus", None) or getattr(policy, "cluster",
+                                                      None)
+    if model is None:
+        raise TypeError(f"policy {policy!r} exposes no cluster model "
+                        "to install a mask client on")
+    model.set_mask_client(client)
+
+
+class Fleet:
+    """Run a set of simulation units concurrently, sharing one broker.
+
+    Each *unit* is a callable receiving the broker (install it on your
+    policy with :func:`install_mask_client`, then run the simulation)
+    and returning an arbitrary result. Units run on daemon threads and
+    are registered with the broker *before* any of them starts, so the
+    first cooperative round already coalesces across the whole fleet.
+
+    ``run`` returns per-unit results in input order; the first unit
+    exception (if any) is re-raised after every thread has stopped —
+    a dying simulator deactivates itself, so survivors keep batching
+    among themselves rather than deadlocking.
+    """
+
+    def __init__(self, engine=None):
+        self.broker = QueryBroker(engine)
+
+    def run(self, units: Sequence[Callable[[QueryBroker], Any]]) -> List[Any]:
+        results: List[Any] = [None] * len(units)
+        errors: List[Optional[BaseException]] = [None] * len(units)
+        broker = self.broker
+
+        def work(i: int, unit: Callable[[QueryBroker], Any]) -> None:
+            try:
+                results[i] = unit(broker)
+            except BaseException as e:  # noqa: BLE001 — reported below
+                errors[i] = e
+            finally:
+                broker.deactivate()
+
+        for _ in units:
+            broker.register()
+        if broker.pad_hint is None:
+            broker.pad_hint = len(units)
+        threads = [threading.Thread(target=work, args=(i, u), daemon=True)
+                   for i, u in enumerate(units)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for e in errors:
+            if e is not None:
+                raise e
+        return results

@@ -7,7 +7,8 @@ import os
 import pytest
 
 from repro.eval import (EvalRunner, EvalTask, aggregate_by_label,
-                        derive_seed, make_tasks, run_task, table1)
+                        derive_seed, make_tasks, prune_checkpoints,
+                        run_task, table1)
 from repro.eval.runner import SHARD_CHARS, iter_checkpoints, shard_dir
 
 # Small matrix: 512-XPU cluster, short traces — seconds, not minutes.
@@ -250,6 +251,74 @@ def test_checkpoint_name_is_filesystem_safe():
 
 def test_workers_default_is_cpu_count():
     assert EvalRunner().workers == os.cpu_count()
+
+
+# ----------------------------------------------------- store pruning
+def _flatten_store(ckpt):
+    """Rewrite a sharded store into the legacy flat layout."""
+    for path in list(iter_checkpoints(ckpt)):
+        os.replace(path, os.path.join(ckpt, os.path.basename(path)))
+    for name in os.listdir(ckpt):
+        sub = os.path.join(ckpt, name)
+        if os.path.isdir(sub):
+            os.rmdir(sub)
+
+
+@pytest.mark.parametrize("flat", [False, True])
+def test_prune_drops_stale_keeps_current(tmp_path, flat):
+    """Prune removes checkpoints whose fingerprint left the task set
+    (here: an old num_jobs) and keeps the current ones resumable —
+    on sharded and legacy-flat stores alike."""
+    ckpt = str(tmp_path / "ckpt")
+    stale = _tasks(runs=1, num_jobs=20)
+    current = _tasks(runs=1, num_jobs=25)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(stale)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(current)
+    if flat:
+        _flatten_store(ckpt)
+    assert len(list(iter_checkpoints(ckpt))) == len(stale) + len(current)
+
+    stats = prune_checkpoints(ckpt, current)
+    assert stats["removed"] == len(stale)
+    assert stats["kept"] == len(current)
+    assert stats["bytes_freed"] > 0
+
+    runner = EvalRunner(checkpoint_dir=ckpt, workers=0)
+    runner.run(current)
+    assert runner.last_stats["reused_from_checkpoint"] == len(current)
+
+
+def test_prune_caps_store_size_evicting_oldest(tmp_path):
+    """With max_bytes, survivors beyond the cap are evicted oldest-
+    mtime first — the newest checkpoints stay resumable."""
+    ckpt = str(tmp_path / "ckpt")
+    tasks = _tasks(runs=2)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(tasks)
+    paths = sorted(iter_checkpoints(ckpt), key=os.path.getmtime)
+    for age, path in enumerate(paths):   # make mtime order deterministic
+        os.utime(path, (1000 + age, 1000 + age))
+    newest = max(paths, key=os.path.getmtime)
+    cap = os.path.getsize(newest)
+    stats = prune_checkpoints(ckpt, tasks, max_bytes=cap)
+    survivors = list(iter_checkpoints(ckpt))
+    assert survivors == [newest]
+    assert stats["removed"] == len(paths) - 1
+
+
+def test_prune_leaves_foreign_files_and_cleans_empty_shards(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    tasks = _tasks(runs=1, num_jobs=20)
+    EvalRunner(checkpoint_dir=ckpt, workers=0).run(tasks)
+    foreign = os.path.join(ckpt, "notes.json")
+    with open(foreign, "w") as f:
+        f.write("{}")
+    shards_before = [n for n in os.listdir(ckpt)
+                     if os.path.isdir(os.path.join(ckpt, n))]
+    stats = prune_checkpoints(ckpt, _tasks(runs=1, num_jobs=25))
+    assert stats["removed"] == len(tasks)       # every stale ckpt gone
+    assert os.path.exists(foreign)              # never ours to delete
+    for name in shards_before:                  # emptied shards removed
+        assert not os.path.isdir(os.path.join(ckpt, name))
 
 
 if __name__ == "__main__":

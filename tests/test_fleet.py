@@ -1,0 +1,258 @@
+"""Fleet simulation layer tests (repro.sim.fleet + the eval runner's
+two-level pool): broker coalescing and bit-exactness, byte-identical
+fleet records vs the sequential single-sim path, worker-side
+checkpointing, and chunking/auto-sizing."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.eval import EvalRunner, make_tasks
+from repro.eval.runner import (iter_checkpoints, make_fleet_chunks,
+                               run_fleet_tasks, task_grid_bucket)
+from repro.kernels.fitmask import ops
+from repro.sim.fleet import Fleet, QueryBroker, install_mask_client
+
+# Small matrix covering both cluster models and two grid cell shapes.
+CONFIGS = [
+    ("RFold (4^3)", "rfold", dict(num_xpus=512, cube_n=4)),
+    ("Reconfig (4^3)", "reconfig", dict(num_xpus=512, cube_n=4)),
+    ("Folding (8^3)", "folding", dict(dims=(8, 8, 8))),
+    ("FirstFit (8^3)", "firstfit", dict(dims=(8, 8, 8))),
+]
+
+
+def _tasks(runs=2, num_jobs=25):
+    return make_tasks(CONFIGS, runs=runs, num_jobs=num_jobs, load=1.5,
+                      seed0=100)
+
+
+def _strip(records):
+    return [{k: v for k, v in r.items() if k != "sim_s"} for r in records]
+
+
+def _occ(rng, b, cell):
+    return rng.random((b,) + cell) < 0.4
+
+
+# ------------------------------------------------------------- broker
+def test_solo_broker_matches_inline_engine():
+    """An unregistered broker answers immediately and bit-exactly."""
+    rng = np.random.default_rng(0)
+    occ = _occ(rng, 3, (6, 6, 6))
+    boxes = ((2, 2, 1), (3, 1, 2), (6, 6, 6))
+    broker = QueryBroker("numpy")
+    ref = np.asarray(ops.get_engine("numpy").multibox(occ, boxes))
+    np.testing.assert_array_equal(broker.multibox(occ, boxes), ref)
+    np.testing.assert_array_equal(
+        broker.free_counts(occ),
+        np.asarray(ops.get_engine("numpy").free_counts(occ)))
+    assert broker.stats.engine_calls == 2
+    assert broker.stats.batched_calls == 0
+
+
+def test_broker_coalesces_and_splits_exactly():
+    """Three concurrent requests over the same cell shape: one engine
+    call, every requester gets its own grids and its own boxes back,
+    in its own order."""
+    rng = np.random.default_rng(1)
+    cell = (5, 5, 5)
+    reqs = [(_occ(rng, b, cell), boxes) for b, boxes in
+            [(1, ((2, 2, 2), (1, 1, 4))),
+             (4, ((1, 1, 4), (3, 3, 1))),
+             (2, ((5, 5, 5),))]]
+    broker = QueryBroker("numpy")
+    results = [None] * len(reqs)
+
+    def worker(i):
+        occ, boxes = reqs[i]
+        results[i] = broker.multibox(occ, boxes)
+
+    for _ in reqs:
+        broker.register()
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(reqs))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for (occ, boxes), out in zip(reqs, results):
+        ref = np.asarray(ops.get_engine("numpy").multibox(occ, boxes))
+        np.testing.assert_array_equal(out, ref)
+    assert broker.stats.engine_calls == 1          # one coalesced call
+    assert broker.stats.batched_calls == 1
+    assert broker.stats.max_coalesced == 3
+    assert broker.stats.max_grids == 7             # 1 + 4 + 2 stacked
+
+
+def test_broker_buckets_by_cell_shape():
+    """Different grid cell shapes cannot share a pass: two engine
+    calls, both answered correctly."""
+    rng = np.random.default_rng(2)
+    a, b = _occ(rng, 2, (4, 4, 4)), _occ(rng, 1, (8, 8, 8))
+    broker = QueryBroker("numpy")
+    results = {}
+
+    def worker(key, occ, boxes):
+        results[key] = broker.multibox(occ, boxes)
+
+    broker.register()
+    broker.register()
+    ts = [threading.Thread(target=worker, args=("a", a, ((2, 2, 2),))),
+          threading.Thread(target=worker, args=("b", b, ((3, 3, 3),)))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    np.testing.assert_array_equal(
+        results["a"],
+        np.asarray(ops.get_engine("numpy").multibox(a, ((2, 2, 2),))))
+    np.testing.assert_array_equal(
+        results["b"],
+        np.asarray(ops.get_engine("numpy").multibox(b, ((3, 3, 3),))))
+    assert broker.stats.engine_calls == 2
+    assert broker.stats.batched_calls == 0
+
+
+def test_deactivate_triggers_pending_flush():
+    """A simulator finishing while its peer waits must flush the
+    peer's round — nobody else will."""
+    broker = QueryBroker("numpy")
+    broker.register()
+    broker.register()
+    occ = np.zeros((1, 4, 4, 4), dtype=bool)
+    out = {}
+
+    def waiter():
+        out["res"] = broker.free_counts(occ)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    while not broker.stats.requests:   # parked, waiting for peer
+        pass
+    broker.deactivate()                # peer finishes without querying
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert out["res"].tolist() == [64]
+
+
+def test_broker_propagates_engine_errors():
+    class Boom:
+        def multibox(self, occ, boxes):
+            raise RuntimeError("engine down")
+
+        def free_counts(self, occ):
+            raise RuntimeError("engine down")
+
+    broker = QueryBroker(Boom())
+    with pytest.raises(RuntimeError, match="engine down"):
+        broker.multibox(np.zeros((1, 4, 4, 4), dtype=bool), ((1, 1, 1),))
+
+
+def test_broker_rejects_unbatched_grids():
+    with pytest.raises(ValueError, match=r"\(B, X, Y, Z\)"):
+        QueryBroker("numpy").free_counts(np.zeros((4, 4, 4), dtype=bool))
+
+
+def test_fleet_surfaces_unit_exception():
+    def bad(broker):
+        raise ValueError("sim exploded")
+
+    def good(broker):
+        return int(broker.free_counts(
+            np.zeros((1, 2, 2, 2), dtype=bool))[0])
+
+    with pytest.raises(ValueError, match="sim exploded"):
+        Fleet("numpy").run([bad, good])
+
+
+def test_install_mask_client_requires_cluster_model():
+    with pytest.raises(TypeError):
+        install_mask_client(object(), QueryBroker("numpy"))
+
+
+# ---------------------------------------------------- fleet-of-sims
+def test_fleet_records_byte_identical_to_sequential():
+    """The tentpole parity contract: fleets produce the same records
+    (minus timing) as the per-task oracle path, for both cluster
+    models, while genuinely batching engine calls."""
+    tasks = _tasks()
+    seq = EvalRunner(workers=0).run(tasks)
+    runner = EvalRunner(workers=0, fleet_size=4)
+    fl = runner.run(tasks)
+    assert _strip(seq) == _strip(fl)
+    broker = runner.last_stats["fleet"]["broker"]
+    assert broker["batched_calls"] > 0
+    assert broker["mean_grids_per_call"] > 1
+
+
+def test_fleet_pool_records_identical(tmp_path):
+    """Two-level pool (processes x fleets) returns the same records
+    and writes every checkpoint worker-side."""
+    tasks = _tasks(runs=2)
+    seq = EvalRunner(workers=0).run(tasks)
+    ckpt = str(tmp_path / "ckpt")
+    runner = EvalRunner(checkpoint_dir=ckpt, workers=2, fleet_size=2)
+    fl = runner.run(tasks)
+    assert _strip(seq) == _strip(fl)
+    assert len(list(iter_checkpoints(ckpt))) == len(tasks)
+    # resume reuses everything the fleet workers checkpointed
+    resumed = EvalRunner(checkpoint_dir=ckpt, workers=2, fleet_size=2)
+    resumed.run(tasks)
+    assert resumed.last_stats["reused_from_checkpoint"] == len(tasks)
+
+
+def test_run_fleet_tasks_engine_override_is_bit_exact():
+    """The broker's engine choice cannot change records (engines are
+    parity-tested); only where masks get computed differs."""
+    tasks = _tasks(runs=1, num_jobs=15)
+    base, _ = run_fleet_tasks(tasks)
+    ref, stats = run_fleet_tasks(tasks, engine="ref")
+    assert _strip(base) == _strip(ref)
+    assert stats["engine_calls"] > 0
+
+
+# ------------------------------------------------- chunking / sizing
+def test_task_grid_bucket_defaults_mirror_make_policy():
+    tasks = _tasks(runs=1)
+    buckets = {t.label: task_grid_bucket(t) for t in tasks}
+    assert buckets["RFold (4^3)"] == ("cube", 4)
+    assert buckets["Folding (8^3)"] == ("static", (8, 8, 8))
+    t = make_tasks([("x", "folding", {})], runs=1, num_jobs=5, load=1.0,
+                   seed0=0)[0]
+    assert task_grid_bucket(t) == ("static", (16, 16, 16))
+
+
+def test_make_fleet_chunks_groups_buckets_and_caps_size():
+    tasks = _tasks(runs=3)             # 6 cube tasks + 6 static tasks
+    chunks = make_fleet_chunks(tasks, list(range(len(tasks))), 4)
+    assert sorted(i for c in chunks for i in c) == list(range(len(tasks)))
+    for chunk in chunks:
+        assert len(chunk) <= 4
+        assert len({task_grid_bucket(tasks[i]) for i in chunk}) == 1
+
+
+def test_auto_fleet_size_scales_with_pending_and_workers():
+    r = EvalRunner(workers=2, fleet_size="auto", fleet_engine="jax")
+    assert r._resolve_fleet_size(24) == 3     # ceil(24 / (4*2))
+    assert r._resolve_fleet_size(800) == 8    # capped
+    assert r._resolve_fleet_size(2) == 2      # floor
+    assert EvalRunner(workers=2)._resolve_fleet_size(24) is None
+    assert EvalRunner(workers=2,
+                      fleet_size=6)._resolve_fleet_size(24) == 6
+
+
+def test_auto_fleet_size_keeps_per_task_path_on_numpy_host():
+    """auto is engine-aware: the host numpy path stays per-task (it
+    is faster there — see BENCH_fleet.json's parity section); batched
+    engines fleet."""
+    assert EvalRunner(workers=2,
+                      fleet_size="auto")._resolve_fleet_size(24) is None
+    assert EvalRunner(workers=2, fleet_size="auto",
+                      fleet_engine="numpy")._resolve_fleet_size(24) is None
+    assert EvalRunner(workers=2, fleet_size="auto",
+                      fleet_engine="pallas")._resolve_fleet_size(24) == 3
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

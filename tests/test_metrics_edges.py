@@ -1,0 +1,110 @@
+"""Boundary coverage for sim/metrics.py and the SimResult properties:
+empty traces, all-dropped traces, and utilization-sample /
+utilization-CDF monotonicity — the edges the aggregation pipeline
+leans on but nothing exercised directly."""
+import numpy as np
+import pytest
+
+from repro.core.allocator import make_policy
+from repro.core.geometry import JobShape
+from repro.sim.job import Job
+from repro.sim.metrics import (jct_percentiles, summarize,
+                               time_weighted_utilization, utilization_cdf)
+from repro.sim.simulator import SimResult, Simulator
+from repro.traces.generator import TraceConfig, generate_trace
+
+
+def _job(job_id, shape, arrival=0.0, duration=10.0):
+    return Job(job_id=job_id, arrival=arrival, duration=duration,
+               shape=JobShape(shape))
+
+
+# ------------------------------------------------------------- empty
+def test_empty_trace_runs_and_summarizes():
+    res = Simulator(make_policy("firstfit", dims=(4, 4, 4)), []).run()
+    assert res.jobs == [] and res.completed == [] and res.dropped == []
+    assert res.jcr == 1.0          # vacuous: nothing arrived, nothing lost
+    s = summarize(res)
+    assert s["num_jobs"] == 0 and s["num_dropped"] == 0
+    assert s["jcr"] == 1.0
+    for q in ("p50", "p90", "p99"):
+        assert np.isnan(s[f"jct_{q}"])
+    assert s["util_mean"] == 0.0   # <2 samples: no time elapsed
+
+
+def test_empty_trace_utilization_cdf_shape():
+    res = Simulator(make_policy("firstfit", dims=(4, 4, 4)), []).run()
+    levels, cdf = utilization_cdf(res)
+    assert len(levels) == len(cdf) == 101
+    assert not np.isnan(cdf).any()
+
+
+def test_jct_percentiles_no_completions_is_nan():
+    res = SimResult(jobs=[], utilization_samples=[], policy_name="x")
+    assert all(np.isnan(v) for v in jct_percentiles(res).values())
+
+
+def test_time_weighted_utilization_underflow_samples():
+    res = SimResult(jobs=[], utilization_samples=[(0.0, 0.5)],
+                    policy_name="x")
+    assert time_weighted_utilization(res) == {"mean": 0.0, "p50": 0.0,
+                                              "p90": 0.0}
+
+
+# -------------------------------------------------------- all-dropped
+def test_all_dropped_trace():
+    """Every job's shape is incompatible with the cluster (exceeds the
+    static torus even when empty): all dropped, none completed, JCR 0,
+    and the summary stays finite where it should."""
+    jobs = [_job(i, (5, 5, 1), arrival=float(i)) for i in range(6)]
+    res = Simulator(make_policy("firstfit", dims=(4, 4, 4)), jobs).run()
+    assert len(res.dropped) == 6 and res.completed == []
+    assert res.jcr == 0.0
+    assert all(not j.scheduled and j.jct is None for j in res.jobs)
+    s = summarize(res)
+    assert s["num_dropped"] == 6 and s["jcr"] == 0.0
+    assert np.isnan(s["jct_p50"])
+
+
+def test_mixed_drop_jcr_counts_scheduled_only():
+    jobs = [_job(0, (2, 2, 1)), _job(1, (5, 5, 1)), _job(2, (2, 1, 1))]
+    res = Simulator(make_policy("firstfit", dims=(4, 4, 4)), jobs).run()
+    assert len(res.dropped) == 1
+    assert res.jcr == pytest.approx(2 / 3)
+
+
+# ------------------------------------------------------- monotonicity
+def _seeded_result():
+    jobs = generate_trace(TraceConfig(num_jobs=40, seed=7,
+                                      target_load=2.0))
+    return Simulator(make_policy("rfold", num_xpus=512, cube_n=4),
+                     jobs).run()
+
+
+def test_utilization_samples_monotone_time_and_bounded():
+    res = _seeded_result()
+    ts = [t for t, _ in res.utilization_samples]
+    us = [u for _, u in res.utilization_samples]
+    assert ts == sorted(ts)                      # event time never rewinds
+    assert all(0.0 <= u <= 1.0 for u in us)
+
+
+def test_utilization_cdf_is_a_cdf():
+    res = _seeded_result()
+    levels, cdf = utilization_cdf(res)
+    assert np.all(np.diff(levels) > 0)
+    assert np.all(np.diff(cdf) >= -1e-12)        # non-decreasing
+    assert cdf[-1] == pytest.approx(1.0)         # all mass at util <= 1
+    assert cdf[0] >= 0.0
+
+
+def test_completed_plus_dropped_plus_running_partition_jobs():
+    res = _seeded_result()
+    completed = {j.job_id for j in res.completed}
+    dropped = {j.job_id for j in res.dropped}
+    assert not completed & dropped
+    assert completed | dropped <= {j.job_id for j in res.jobs}
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
