@@ -1,32 +1,45 @@
 """Fleet-batched eval benchmark: one engine, many simulators.
 
-Two claims under test (see DESIGN.md §Fleet-batched eval):
+Two claims under test (see DESIGN.md §Fleet-batched eval and
+§Continuous-batching broker):
 
-* **Parity.** The CI-sized eval matrix (3 runs x 200 jobs x 8 policy
-  configs; ``--quick`` shrinks it) is run per-task (sequential
-  single-sim, the retained oracle path) and as in-process fleets,
-  both at ``workers=0`` so the delta is the fleet layer itself, not
-  process parallelism. The Table 1 / Fig 3 / Fig 4 aggregates must be
-  **byte-identical** — the broker answers every (grid, box) query
-  with exactly the planes the inline engine would have produced. The
-  wall-clock delta on the default numpy engine is reported but not
-  asserted: host integral-image calls are already cheap, so batching
-  them across simulators is roughly neutral.
+* **Parity + host headline.** The CI-sized eval matrix (3 runs x 200
+  jobs x 8 policy configs; ``--quick`` shrinks it) is run per-task
+  (``fleet_size=0`` — the retained sequential oracle path) and with
+  the runner's *defaults* (fleet mode is unconditional now), both at
+  ``workers=0`` so the delta is the fleet layer itself, not process
+  parallelism. The Table 1 / Fig 3 / Fig 4 aggregates must be
+  **byte-identical**, and on the default numpy engine the fleet side
+  must be **no slower than sequential** (>= 1.0x): the broker's
+  continuous quorum/deadline scheduling plus the genuinely batched
+  host multibox (``fit_mask_multi_fast``) and inline free-counts must
+  at least pay for their own coordination.
 
-* **Headline.** On a batched engine — where a call costs real
+* **Engine headline.** On a batched engine — where a call costs real
   dispatch, which is the whole reason the multibox kernel exists —
   serving a fleet's *coalesced query stream* must beat answering the
-  same stream with per-simulator batch-1 calls by >= 2x, with the
+  same stream with per-simulator batch-1 calls by >= 5x, with the
   broker demonstrably issuing batched (B > 1, multi-request) engine
   calls. The headline replays an eval-shaped query stream (per
   round, each of N simulators submits one multibox over its own
   16^3 occupancy against a shared candidate-box set, plus one
   free-counts query — the static-torus epoch pattern) through the
-  *real* broker, one thread per simulator, against the ``jax``
-  engine (the accelerator path that runs everywhere CI does; the
-  Pallas kernel shares its batching axis). The same stream is then
-  driven batch-1, and both sides are warmed before timing. Answers
-  are asserted bit-identical per round.
+  *real* broker under the fleet's production flush policy, one
+  thread per simulator, against the ``jax`` engine (the accelerator
+  path that runs everywhere CI does; the Pallas kernel shares its
+  batching axis). The same stream is then driven batch-1, and both
+  sides are warmed before timing. Answers are asserted equivalent
+  per round (same fit truth-planes, same free counts — the broker's
+  bucketed path returns bool planes where the inline path returns
+  int32 0/1).
+
+  Where the 5x comes from: one fused program per flush (integral
+  image + all K planes + free counts, written in-place into a single
+  (B, K, X, Y, Z) buffer) replaces ~22 per-sim dispatches; the
+  free-counts content cache answers the follow-up free query of
+  every simulator from the planes flush; and the bucket's stable box
+  table means the steady state re-runs one compiled program at exact
+  K rather than retracing per flush union.
 
   This is deliberately an engine-serving measurement, like the
   multi-box kernel bench it extends (one VMEM pass for K boxes ->
@@ -49,6 +62,11 @@ from typing import Dict
 
 from repro.eval import (EvalRunner, aggregate_by_label, fig3, fig4,
                         make_tasks, table1)
+
+# Dual headline floors: fleet mode may not slow the host path down,
+# and must beat per-sim batch-1 driving on a compiled engine by 5x.
+NUMPY_FLOOR = 1.0
+ENGINE_FLOOR = 5.0
 
 # The paper's full policy matrix (benchmarks.paper_eval.TABLE1_CONFIGS
 # + the Fig-3 extras), inlined so the bench stays import-light.
@@ -75,15 +93,16 @@ def _figures(records):
 
 
 def parity_section(runs: int, num_jobs: int, seed0: int) -> Dict:
-    """Sequential vs fleet on the default (numpy) engine: byte-equal
-    figures required, wall delta reported."""
+    """Sequential oracle (``fleet_size=0``) vs the runner defaults on
+    the default (numpy) engine: byte-equal figures required, and the
+    fleet side must not be slower (the numpy half of the headline)."""
     tasks = make_tasks(EVAL_CONFIGS, runs=runs, num_jobs=num_jobs,
                        load=1.5, seed0=seed0)
     t0 = time.perf_counter()
-    seq = EvalRunner(workers=0).run(tasks)
+    seq = EvalRunner(workers=0, fleet_size=0).run(tasks)
     seq_s = time.perf_counter() - t0
 
-    fleet_runner = EvalRunner(workers=0, fleet_size=8)
+    fleet_runner = EvalRunner(workers=0)   # fleet mode is the default
     t0 = time.perf_counter()
     fl = fleet_runner.run(tasks)
     fleet_s = time.perf_counter() - t0
@@ -115,16 +134,17 @@ REPLAY_BOXES = ((1, 1, 8), (1, 2, 4), (1, 4, 8), (2, 2, 2), (2, 2, 8),
 
 def engine_section(sims: int, rounds: int, seed0: int,
                    engine: str = "jax") -> Dict:
-    """The headline: replay ``rounds`` coalescing rounds of ``sims``
-    simulators' mask queries through the real broker (one thread per
-    simulator) vs driving the identical stream with per-simulator
-    batch-1 calls. Both sides warm; answers asserted bit-identical."""
+    """The engine headline: replay ``rounds`` coalescing rounds of
+    ``sims`` simulators' mask queries through the real broker under
+    the fleet's production flush policy (one thread per simulator)
+    vs driving the identical stream with per-simulator batch-1
+    calls. Both sides warm; answers asserted equivalent."""
     import threading
 
     import numpy as np
 
     from repro.kernels.fitmask import ops
-    from repro.sim.fleet import QueryBroker
+    from repro.sim.fleet import Fleet
 
     eng = ops.get_engine(engine)
     rng = np.random.default_rng(seed0)
@@ -145,15 +165,22 @@ def engine_section(sims: int, rounds: int, seed0: int,
         return out
 
     def drive_fleet():
-        broker = QueryBroker(eng)
+        # The production broker policy: engine-aware quorum/deadline,
+        # bucketed padded programs, fc content cache.
+        broker = Fleet(eng).broker
         broker.pad_hint = sims
         out = [[None] * rounds for _ in range(sims)]
 
         def sim(s):
-            for t in range(rounds):
-                mb = broker.multibox(occ[s, t], REPLAY_BOXES)
-                fc = broker.free_counts(occ[s, t])
-                out[s][t] = (mb, fc)
+            try:
+                for t in range(rounds):
+                    mb = broker.multibox(occ[s, t], REPLAY_BOXES)
+                    fc = broker.free_counts(occ[s, t])
+                    out[s][t] = (mb, fc)
+            finally:
+                # Each simulator retires itself so survivors' rounds
+                # keep flushing — exactly what Fleet.run does.
+                broker.deactivate()
 
         for _ in range(sims):
             broker.register()
@@ -163,13 +190,12 @@ def engine_section(sims: int, rounds: int, seed0: int,
             th.start()
         for th in threads:
             th.join()
-        for _ in range(sims):
-            broker.deactivate()
         return out, broker.stats
 
-    # Warm both sides (jit compiles at padded-B and B=1 shapes), then
-    # time several passes and keep the best of each: dispatch timings
-    # on a shared/loaded host are noisy, and best-of-N measures the
+    # Warm both sides (jit compiles at the bucket's padded and exact-K
+    # table shapes, and at B=1 for the sequential path), then time
+    # several passes and keep the best of each: dispatch timings on a
+    # shared/loaded host are noisy, and best-of-N measures the
     # machinery rather than the scheduler.
     passes = 3
     drive_fleet()
@@ -190,8 +216,11 @@ def engine_section(sims: int, rounds: int, seed0: int,
         if seq_s is None or dt < seq_s:
             seq_s, seq_out = dt, out
 
+    # Truth-plane equivalence: inline multibox answers int32 0/1, the
+    # broker's bucketed flush path answers bool — same fit truth.
     identical = all(
-        np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        np.array_equal(a[0] != 0, b[0] != 0)
+        and np.array_equal(a[1], b[1])
         for srow, frow in zip(seq_out, fleet_out)
         for a, b in zip(srow, frow))
     return {
@@ -230,28 +259,46 @@ def main(argv=None) -> Dict:
           f"-> {eng['speedup']}x, broker {eng['broker']}")
 
     broker = eng["broker"]
+    pass_numpy = bool(par["identical"] and par["numpy_speedup"]
+                      and par["numpy_speedup"] >= NUMPY_FLOOR)
+    pass_engine = bool(eng["identical"] and eng["speedup"]
+                       and eng["speedup"] >= ENGINE_FLOOR
+                       and broker["batched_calls"] > 0
+                       and broker["mean_grids_per_call"] > 1)
     results = {
         "config": {"quick": args.quick, "seed0": args.seed0},
         "parity": par,
         "engine": eng,
         "headline": {
-            "criterion": "broker-coalesced query stream >= 2x faster "
-                         "than per-sim batch-1 driving on the batched "
-                         f"({args.engine}) engine at CI size, broker "
-                         "issuing batched (B > 1) engine calls, "
-                         "answers bit-identical, CI-sized eval "
-                         "aggregates byte-identical (parity section)",
-            "speedup": eng["speedup"],
+            "criterion": "fleet mode (the runner default) is >= "
+                         f"{NUMPY_FLOOR}x sequential on the numpy host "
+                         "engine with byte-identical eval aggregates, "
+                         "AND the broker-coalesced query stream is >= "
+                         f"{ENGINE_FLOOR}x faster than per-sim batch-1 "
+                         f"driving on the batched ({args.engine}) "
+                         "engine at CI size, broker issuing batched "
+                         "(B > 1) engine calls, answers equivalent",
+            "numpy_speedup": par["numpy_speedup"],
+            "engine_speedup": eng["speedup"],
             "batched_calls": broker["batched_calls"],
             "mean_grids_per_call": broker["mean_grids_per_call"],
-            "pass": bool(par["identical"] and eng["identical"]
-                         and eng["speedup"] and eng["speedup"] >= 2.0
-                         and broker["batched_calls"] > 0
-                         and broker["mean_grids_per_call"] > 1),
+            "flush_triggers": {
+                "all_parked": broker["flush_all_parked"],
+                "quorum": broker["flush_quorum"],
+                "timeout": broker["flush_timeout"],
+            },
+            "requeued": broker["requeued"],
+            "b_pad_waste": broker["b_pad_waste"],
+            "k_pad_waste": broker["k_pad_waste"],
+            "fc_cache_hits": broker["fc_cache_hits"],
+            "pass_numpy": pass_numpy,
+            "pass_engine": pass_engine,
+            "pass": pass_numpy and pass_engine,
         },
     }
-    print(f"# headline: {eng['speedup']}x "
-          f"pass={results['headline']['pass']}")
+    print(f"# headline: numpy {par['numpy_speedup']}x "
+          f"(pass={pass_numpy}), {args.engine} {eng['speedup']}x "
+          f"(pass={pass_engine}) -> pass={results['headline']['pass']}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)

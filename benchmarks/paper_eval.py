@@ -144,12 +144,13 @@ def main(argv=None) -> None:
                     help="process-pool width (default: auto-sized from "
                          "os.cpu_count(); <=1 runs inline)")
     ap.add_argument("--fleet-size", type=str, default="auto",
-                    help="simulators per in-process fleet (cooperative "
+                    help="simulators per in-process fleet (continuous "
                          "engine-call batching, repro.sim.fleet). "
-                         "'auto' fleets when a batched fitmask engine "
-                         "is selected and keeps the per-task path on "
-                         "the numpy host default; an integer forces "
-                         "fleets of that size; 0/1 disables")
+                         "'auto' (the default) always fleets — on "
+                         "every engine, numpy host included — sizing "
+                         "from the task backlog per worker; an "
+                         "integer forces fleets of that size; 0/1 "
+                         "selects the sequential per-task oracle path")
     ap.add_argument("--ckpt-dir", type=str, default=DEFAULT_CKPT_DIR,
                     help="per-run checkpoint dir ('' disables)")
     ap.add_argument("--fresh", action="store_true",
@@ -246,7 +247,7 @@ def main(argv=None) -> None:
                        "workers": workers,
                        "fleet_size_arg": args.fleet_size,
                        # the resolved size actually used (None: the
-                       # per-task path ran, e.g. auto on numpy host)
+                       # sequential per-task oracle path ran)
                        "fleet_size": stats.get("fleet", {}).get("size"),
                        "fitmask_engine": ops.default_engine_name()},
             "pool": stats,

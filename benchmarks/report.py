@@ -159,7 +159,7 @@ def reconfig_table(path: str = "BENCH_reconfig.json") -> str:
 
 def fleet_table(path: str = "BENCH_fleet.json") -> str:
     """Fleet-batched eval: broker-coalesced engine calls vs the
-    sequential single-sim path (parity + headline speedup)."""
+    sequential single-sim oracle (parity + dual headline)."""
     with open(path) as f:
         bench = json.load(f)
     lines = []
@@ -185,10 +185,23 @@ def fleet_table(path: str = "BENCH_fleet.json") -> str:
             f"{eng.get('sequential_s')} | {eng.get('fleet_s')} | "
             f"{eng.get('speedup')}x | {b.get('mean_grids_per_call')} | "
             f"{b.get('batched_calls')}/{b.get('engine_calls')} |")
+        if b:
+            lines.append(
+                f"\nBroker: flush triggers all_parked="
+                f"{b.get('flush_all_parked')} quorum="
+                f"{b.get('flush_quorum')} timeout="
+                f"{b.get('flush_timeout')}, requeued="
+                f"{b.get('requeued')}, pad waste B="
+                f"{b.get('b_pad_waste')} K={b.get('k_pad_waste')}, "
+                f"free-count cache hits={b.get('fc_cache_hits')}")
     head = bench.get("headline", {})
     if head:
-        lines.append(f"\nHeadline ({head.get('criterion')}): "
-                     f"{head.get('speedup')}x, pass={head.get('pass')}")
+        lines.append(
+            f"\nHeadline: numpy {head.get('numpy_speedup')}x "
+            f"(pass={head.get('pass_numpy')}), engine "
+            f"{head.get('engine_speedup')}x "
+            f"(pass={head.get('pass_engine')}) -> "
+            f"pass={head.get('pass')}")
     return "\n".join(lines)
 
 

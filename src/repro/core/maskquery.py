@@ -20,10 +20,14 @@ to whatever client is installed:
 The contract is deliberately tiny — the two primitives every policy
 reduces to:
 
-  ``multibox(occ, boxes) -> (B, K, X, Y, Z) int32 numpy``
+  ``multibox(occ, boxes) -> (B, K, X, Y, Z) integer/bool numpy``
       occ is a (B, X, Y, Z) bool grid batch; plane k is the full-grid
-      fit mask of ``boxes[k]`` (0 where the box overhangs or cannot
-      fit), in the *request's* box order.
+      fit mask of ``boxes[k]``, *nonzero where the box fits* (zero
+      where it overhangs or cannot fit), in the *request's* box order.
+      The dtype is the serving path's choice — classic engines return
+      int32 0/1, the broker's bucketed flush path returns bool —
+      so consumers test ``!= 0`` rather than comparing dtypes (both
+      encodings carry identical truth values; parity-tested).
   ``free_counts(occ) -> (B,) int64 numpy``
       free cells per grid.
 
@@ -46,10 +50,19 @@ Box = Tuple[int, int, int]
 
 
 class MaskQueryClient:
-    """The request/response contract a torus submits mask work to."""
+    """The request/response contract a torus submits mask work to.
+
+    ``host_free`` advertises that the backing engine computes on the
+    host with cost linear in the number of boxes (numpy). Toruses use
+    it to choose a *lazy* mask strategy (ask only for the shape in
+    hand) instead of the prefetch-everything-seen strategy that
+    amortizes dispatch on compiled engines."""
+
+    host_free = False
 
     def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
-        """(B, X, Y, Z) occupancy x K boxes -> (B, K, X, Y, Z) int32."""
+        """(B, X, Y, Z) occupancy x K boxes -> (B, K, X, Y, Z) numpy,
+        nonzero where the box fits (consumers test ``!= 0``)."""
         raise NotImplementedError
 
     def free_counts(self, occ) -> np.ndarray:
@@ -65,6 +78,7 @@ class InlineMaskClient(MaskQueryClient):
 
     def __init__(self, engine):
         self.engine = engine
+        self.host_free = bool(getattr(engine, "host_free", False))
 
     def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
         return np.asarray(self.engine.multibox(occ, boxes))

@@ -481,10 +481,20 @@ class ReconfigTorus:
             else:
                 # One multi-box pass answers every seen-but-uncomputed
                 # shape for ALL cubes; masks already cached this epoch
-                # are merged with, not recomputed.
+                # are merged with, not recomputed. That prefetch only
+                # pays on a compiled engine, where per-box cost is
+                # nearly free and dispatch is what's amortized. A
+                # host-backed client (numpy behind a broker) is the
+                # opposite — multibox cost is linear in K, and most of
+                # the hundreds of seen shapes are never queried in any
+                # one epoch — so it stays lazy, like the no-client
+                # host path: ask only for the shape in hand.
                 self._seen_shapes.add(shape)
-                missing = sorted(s for s in self._seen_shapes
-                                 if s not in self._shape_masks)
+                if getattr(self._engine, "host_free", False):
+                    missing = [shape]
+                else:
+                    missing = sorted(s for s in self._seen_shapes
+                                     if s not in self._shape_masks)
                 out = self._engine.multibox(self.occ, missing)
                 for k, s in enumerate(missing):
                     self._shape_masks[s] = out[:, k] != 0

@@ -8,15 +8,16 @@ JSON file, keyed by a fingerprint of the task's full configuration, so
 an interrupted sweep resumes from the completed subset instead of
 restarting.
 
-With ``fleet_size`` set, each worker runs its slice of the matrix as a
-cooperatively-scheduled *fleet* (``repro.sim.fleet``): the simulators'
-fitmask/free-counts queries coalesce through a shared query broker
-into genuinely batched engine calls (grids stacked on the multibox
-``B`` axis). Chunks group tasks whose grids share a cell shape so the
-broker actually gets to stack them. Records and checkpoints are
-byte-identical to the per-task path (the broker is bit-exact; the
-per-task path is retained below as the parity oracle and for
-``fleet_size=None``).
+Fleet mode is the default: each worker runs its slice of the matrix
+as a continuously-batched *fleet* (``repro.sim.fleet``) — the
+simulators' fitmask/free-counts queries coalesce through a shared
+query broker into genuinely batched engine calls (grids stacked on
+the multibox ``B`` axis), with rounds flushed on quorum or deadline
+so a fleet never stalls on its slowest member. Chunks group tasks
+whose grids share a cell shape so the broker actually gets to stack
+them. Records and checkpoints are byte-identical to the per-task path
+(the broker is bit-exact; the per-task path is retained below as the
+parity oracle, selected with ``fleet_size=0``).
 
 Checkpoint layout: files are bucketed into fingerprint-prefix
 subdirectories (``<dir>/<fp[:2]>/<name>.json``, 256 shards) so
@@ -254,9 +255,10 @@ def make_fleet_chunks(tasks: Sequence[EvalTask], pending: Sequence[int],
 
 def run_fleet_tasks(tasks: Sequence[EvalTask],
                     checkpoint_dir: Optional[str] = None,
-                    engine=None) -> Tuple[List[Dict], Dict]:
-    """Worker-side: run a chunk of tasks as one cooperative fleet
-    sharing a query broker (``repro.sim.fleet``). Each simulator
+                    engine=None, quorum="auto",
+                    timeout="auto") -> Tuple[List[Dict], Dict]:
+    """Worker-side: run a chunk of tasks as one continuously-batched
+    fleet sharing a query broker (``repro.sim.fleet``). Each simulator
     checkpoints itself the moment it finishes, so per-run resume
     granularity survives a worker dying mid-fleet. Returns the
     records (task order) and the broker's coalescing stats.
@@ -268,10 +270,15 @@ def run_fleet_tasks(tasks: Sequence[EvalTask],
     ``fitmask_engine`` in ``policy_kw`` is overridden on this path
     (answers are bit-identical across engines, so records don't
     change — only where the masks get computed).
+
+    ``quorum``/``timeout`` tune the broker's flush policy
+    (``"auto"``: half-fleet quorum, engine-aware deadline; see
+    :class:`repro.sim.fleet.Fleet`) — schedules are invariant to them
+    by the broker's parity contract, only wall-time moves.
     """
     from repro.sim.fleet import Fleet
 
-    fleet = Fleet(engine)
+    fleet = Fleet(engine, quorum=quorum, timeout=timeout)
 
     def unit(task: EvalTask):
         def go(broker):
@@ -294,24 +301,32 @@ class EvalRunner:
     their stored fingerprint matches the requested configuration;
     mismatching or unreadable checkpoints are ignored and re-executed.
 
-    ``fleet_size`` turns on the second pool level: pending tasks are
+    ``fleet_size`` controls the second pool level: pending tasks are
     chunked into in-process fleets of at most that many simulators
-    (``"auto"`` sizes chunks from the pending count and worker width,
-    keeping several chunks per worker for load balance), and each
-    chunk's mask queries ride one shared query broker as batched
-    engine calls. ``None``/``0``/``1`` keeps the per-task path —
-    records are byte-identical either way. ``fleet_engine`` picks the
-    brokers' engine (default: the registry's selection order).
+    (the default ``"auto"`` sizes chunks from the pending count and
+    worker width, keeping several chunks per worker for load
+    balance), and each chunk's mask queries ride one shared query
+    broker as continuously-batched engine calls — on *every* engine,
+    the host numpy path included (its multibox is genuinely (B, K)
+    vectorized, see BENCH_fleet.json). ``None``/``0``/``1`` selects
+    the per-task oracle path — records are byte-identical either way.
+    ``fleet_engine`` picks the brokers' engine (default: the
+    registry's selection order); ``fleet_quorum``/``fleet_timeout``
+    tune the brokers' flush policy (``"auto"``: half-fleet quorum,
+    engine-aware deadline).
     """
 
     def __init__(self, checkpoint_dir: Optional[str] = None,
                  workers: Optional[int] = None, emit=None,
-                 fleet_size=None, fleet_engine: Optional[str] = None):
+                 fleet_size="auto", fleet_engine: Optional[str] = None,
+                 fleet_quorum="auto", fleet_timeout="auto"):
         self.checkpoint_dir = checkpoint_dir
         self.workers = os.cpu_count() if workers is None else workers
         self.emit = emit or (lambda *a: None)
         self.fleet_size = fleet_size
         self.fleet_engine = fleet_engine
+        self.fleet_quorum = fleet_quorum
+        self.fleet_timeout = fleet_timeout
         self.last_stats: Dict = {}
 
     # -- checkpoint store ---------------------------------------------
@@ -363,22 +378,14 @@ class EvalRunner:
         if fs in (None, 0, 1):
             return None
         if fs == "auto":
-            # Engine-aware: fleets exist to batch *engine* calls, and
-            # only pay off where a call carries real dispatch cost. On
-            # the host numpy path per-task is measurably faster (the
-            # parity section of BENCH_fleet.json tracks the delta), so
-            # auto keeps it; an explicit integer always forces fleets.
-            engine = self.fleet_engine
-            name = (getattr(engine, "name", None)
-                    if hasattr(engine, "multibox") else engine)
-            if name is None:
-                from repro.kernels.fitmask import ops
-                name = ops.default_engine_name()
-            if name == "numpy":
-                return None
-            # Several chunks per worker (rebalancing headroom for the
-            # wildly different per-policy sim costs), batching benefit
-            # saturating around 8 simulators per broker round.
+            # Fleet mode is unconditional: with the broker's
+            # continuous flush scheduling and the genuinely batched
+            # numpy multibox, the fleet path beats per-task on every
+            # engine, host numpy included (the parity section of
+            # BENCH_fleet.json tracks the margin). Several chunks per
+            # worker (rebalancing headroom for the wildly different
+            # per-policy sim costs), batching benefit saturating
+            # around 8 simulators per broker round.
             workers = max(1, self.workers or 1)
             return max(2, min(8, -(-n_pending // (4 * workers))))
         return int(fs)
@@ -452,7 +459,9 @@ class EvalRunner:
                 futs = {pool.submit(run_fleet_tasks,
                                     [tasks[i] for i in chunk],
                                     self.checkpoint_dir,
-                                    self.fleet_engine): chunk
+                                    self.fleet_engine,
+                                    self.fleet_quorum,
+                                    self.fleet_timeout): chunk
                         for chunk in chunks}
                 remaining = set(futs)
                 while remaining:
@@ -464,11 +473,16 @@ class EvalRunner:
             for chunk in chunks:
                 account(chunk, run_fleet_tasks(
                     [tasks[i] for i in chunk], self.checkpoint_dir,
-                    self.fleet_engine))
+                    self.fleet_engine, self.fleet_quorum,
+                    self.fleet_timeout))
 
-        agg = {k: sum(s[k] for s in broker_totals)
-               for k in ("requests", "flushes", "engine_calls",
-                         "batched_calls", "grids")}
+        count_keys = ("requests", "flushes", "engine_calls",
+                      "batched_calls", "grids", "flush_all_parked",
+                      "flush_quorum", "flush_timeout", "requeued",
+                      "padded_grids", "k_slots", "k_needed",
+                      "fc_inline", "fc_cache_hits", "fc_cache_misses")
+        agg = {k: sum(s.get(k, 0) for s in broker_totals)
+               for k in count_keys}
         agg["max_grids"] = max((s["max_grids"] for s in broker_totals),
                                default=0)
         agg["max_coalesced"] = max((s["max_coalesced"]
@@ -476,6 +490,11 @@ class EvalRunner:
         agg["mean_grids_per_call"] = (
             round(agg["grids"] / agg["engine_calls"], 2)
             if agg["engine_calls"] else None)
+        total_b = agg["grids"] + agg["padded_grids"]
+        agg["b_pad_waste"] = (round(agg["padded_grids"] / total_b, 4)
+                              if total_b else 0.0)
+        agg["k_pad_waste"] = (round(1.0 - agg["k_needed"] / agg["k_slots"],
+                                    4) if agg["k_slots"] else 0.0)
         self._fleet_stats = {"size": fleet_size, "fleets": len(chunks),
                              "broker": agg}
 

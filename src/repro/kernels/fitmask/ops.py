@@ -40,6 +40,14 @@ Box = Tuple[int, int, int]
 ENGINE_ENV = "REPRO_FITMASK_ENGINE"
 _default_engine: Optional[str] = None
 
+# Compile-cache caps. Per-box window programs and per-bucket fused
+# programs are cached per distinct key; a long multi-shape sweep keeps
+# minting new keys, so the caches are LRU-bounded rather than unbounded
+# ``functools.cache`` (evicting a program only costs a re-jit if the
+# shape ever comes back — it cannot change results).
+WINDOW_CACHE_SIZE = 256   # distinct boxes (allocator candidate sets)
+BUCKET_CACHE_SIZE = 64    # distinct fused (box-table, grid) programs
+
 
 def _canon_boxes(boxes: Sequence[Box]) -> Tuple[Box, ...]:
     return tuple(tuple(int(v) for v in b) for b in boxes)  # type: ignore
@@ -48,9 +56,24 @@ def _canon_boxes(boxes: Sequence[Box]) -> Tuple[Box, ...]:
 class FitmaskEngine:
     """One fitmask backend. Subclasses implement :meth:`multibox` and
     :meth:`free_counts`; :meth:`fitmask` is the single-box convenience
-    on top of :meth:`multibox`."""
+    on top of :meth:`multibox`.
+
+    Two capability flags drive the fleet broker's per-bucket padding
+    policy (``repro.sim.fleet``):
+
+    ``pads_shapes``
+        True for compiled backends, where every distinct (B, K) input
+        shape traces/compiles a fresh XLA program — the broker then
+        pads flushes to a small set of bucketed shapes. False for the
+        host engine, where padding is pure wasted arithmetic.
+    ``host_free``
+        True when ``free_counts`` is a cheap host reduction that is
+        faster answered inline than coalesced through a broker round.
+    """
 
     name = "base"
+    pads_shapes = False
+    host_free = False
 
     def multibox(self, occ, boxes: Sequence[Box]):
         """(B, X, Y, Z) x K boxes -> (B, K, X, Y, Z) int32."""
@@ -63,21 +86,44 @@ class FitmaskEngine:
         never rebuild the host integral image (ROADMAP item)."""
         raise NotImplementedError
 
+    def multibox_bucketed(self, occ, boxes: Sequence[Box]):
+        """The fleet broker's flush entry: one engine pass answering
+        all K boxes AND the per-grid free counts together, as
+        ``(planes, free)`` — planes (B, K, X, Y, Z), *nonzero where
+        the box fits* (any integer/bool dtype; the classic
+        :meth:`multibox` int32 contract is one valid encoding), free
+        (B,) integer. Engines with a fused program override this so a
+        flush is a single dispatch; the default is the two classic
+        calls, so every engine is broker-servable."""
+        return self.multibox(occ, boxes), self.free_counts(occ)
+
     def fitmask(self, occ, box: Box):
         """(B, X, Y, Z) -> (B, X, Y, Z) int32 for one box."""
         return self.multibox(occ, (box,))[:, 0]
 
 
 class NumpyEngine(FitmaskEngine):
-    """Host integral-image engine — the sim hot path and the oracle.
-    Deliberately references no jax symbol: results stay numpy unless
-    the caller converts (regression-tested)."""
+    """Host integral-image engine — the sim hot path and the oracle
+    arbiter. Deliberately references no jax symbol: results stay numpy
+    unless the caller converts (regression-tested).
+
+    ``multibox`` runs the genuinely batched (B, K) vectorized form
+    (``fit_mask_multi_fast``: one stacked int16 integral image, nested
+    per-axis differencing, no per-grid python loop); the straight-line
+    ``fit_mask_multi`` is retained in ``repro.core.fitmask`` as its
+    parity oracle."""
 
     name = "numpy"
+    host_free = True
 
     def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
-        return np_engine.fit_mask_multi(np.asarray(occ),
-                                        _canon_boxes(boxes))
+        return np_engine.fit_mask_multi_fast(np.asarray(occ),
+                                             _canon_boxes(boxes))[0]
+
+    def multibox_bucketed(self, occ, boxes: Sequence[Box]):
+        masks, free = np_engine.fit_mask_multi_fast(
+            np.asarray(occ), _canon_boxes(boxes), out_dtype=bool)
+        return masks, free
 
     def free_counts(self, occ) -> np.ndarray:
         return np_engine.free_counts(np.asarray(occ))
@@ -89,9 +135,15 @@ class JaxEngine(FitmaskEngine):
     each distinct box jits one small window-extraction program — so
     when the allocator's candidate set grows by a box, only that box
     compiles (a single K-static program would recompile the whole,
-    ever-larger, unrolled loop on every growth)."""
+    ever-larger, unrolled loop on every growth).
+
+    The fleet broker instead calls :meth:`multibox_bucketed`, whose
+    box set is a *stable padded table* (one per bucket): there the
+    whole-table fused single-dispatch program wins, because it is
+    compiled once and re-run for every flush of the bucket."""
 
     name = "jax"
+    pads_shapes = True
 
     @staticmethod
     @functools.cache
@@ -109,7 +161,7 @@ class JaxEngine(FitmaskEngine):
         return jax.jit(ii)
 
     @staticmethod
-    @functools.cache
+    @functools.lru_cache(maxsize=WINDOW_CACHE_SIZE)
     def _window_fn(box: Box):
         import jax
         import jax.numpy as jnp
@@ -138,6 +190,74 @@ class JaxEngine(FitmaskEngine):
         return jnp.stack([self._window_fn(b)(ii) for b in boxes], axis=1)
 
     @staticmethod
+    @functools.lru_cache(maxsize=BUCKET_CACHE_SIZE)
+    def _bucket_fn(boxes: Tuple[Box, ...]):
+        """One fused jitted program for a *stable* box table: int16
+        integral image (memory-bound halving; exact up to 31^3 cells),
+        nested per-axis differencing (three subtractions, as the Pallas
+        kernel does), bool planes, and the free counts read off the
+        integral-image corner — a flush is a single XLA dispatch.
+        Retraces per (B, cell) shape, which is exactly what the
+        broker's bucketed padding keeps small.
+
+        Three trace-time tricks keep the program lean on top of the
+        shared integral image: partial differences are memoised per
+        ``a`` and per ``(a, b)`` prefix (candidate tables cluster on
+        shared extents, so most boxes pay only the final axis);
+        duplicate boxes — the broker pads table capacity with repeats
+        — reuse the already traced comparison instead of recomputing
+        it; and every plane is written straight into one
+        ``(B, K, X, Y, Z)`` output buffer through a chain of
+        ``dynamic_update_slice`` ops that XLA turns into in-place
+        writes — no per-plane zero template and no final ``stack``
+        copy."""
+        import jax
+        import jax.numpy as jnp
+
+        def run(occ):
+            bsz, x, y, z = occ.shape
+            vol = x * y * z
+            dt = jnp.int16 if vol <= 32767 else jnp.int32
+            ii = jnp.pad(occ.astype(dt),
+                         ((0, 0), (1, 0), (1, 0), (1, 0)))
+            for ax in (1, 2, 3):
+                ii = jnp.cumsum(ii, axis=ax)
+            sx, sxy, fits = {}, {}, {}
+            out = jnp.zeros((bsz, len(boxes), x, y, z), jnp.bool_)
+            for k, box in enumerate(boxes):
+                if box not in fits:
+                    a, b, c = box
+                    if a > x or b > y or c > z:
+                        fits[box] = None   # infeasible: stays zero
+                    else:
+                        if a not in sx:
+                            sx[a] = ii[:, a:, :, :] - ii[:, :-a, :, :]
+                        if (a, b) not in sxy:
+                            s = sx[a]
+                            sxy[(a, b)] = (s[:, :, b:, :]
+                                           - s[:, :, :-b, :])
+                        s = sxy[(a, b)]
+                        s = s[:, :, :, c:] - s[:, :, :, :-c]
+                        fits[box] = s == 0
+                if fits[box] is not None:
+                    out = jax.lax.dynamic_update_slice(
+                        out, fits[box][:, None], (0, k, 0, 0, 0))
+            free = vol - ii[:, -1, -1, -1].astype(jnp.int32)
+            return out, free
+
+        return jax.jit(run)
+
+    def multibox_bucketed(self, occ, boxes: Sequence[Box]):
+        import jax.numpy as jnp
+        boxes = _canon_boxes(boxes)
+        occ = jnp.asarray(occ)
+        if not boxes:
+            bsz, x, y, z = occ.shape
+            return (jnp.zeros((bsz, 0, x, y, z), jnp.bool_),
+                    self.free_counts(occ))
+        return self._bucket_fn(boxes)(occ)
+
+    @staticmethod
     @functools.cache
     def _free_counts_fn():
         import jax
@@ -156,9 +276,14 @@ class JaxEngine(FitmaskEngine):
 
 class PallasEngine(FitmaskEngine):
     """The multi-box Pallas kernel: one VMEM pass for all K boxes,
-    compiled on TPU, interpret mode elsewhere."""
+    compiled on TPU, interpret mode elsewhere. ``multibox`` is already
+    a single static-box-table program, so the default
+    ``multibox_bucketed`` (multibox + free_counts) is two dispatches —
+    both shape-stable under the broker's bucketed padding, hence
+    ``pads_shapes``."""
 
     name = "pallas"
+    pads_shapes = True
 
     def __init__(self, interpret: Optional[bool] = None):
         self._interpret = interpret

@@ -1,7 +1,7 @@
 """jax.lax.reduce_window oracle for the fitmask kernel."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,3 +24,19 @@ def fitmask_reference(occ: jnp.ndarray,
     pad = ((0, 0), (0, x - fits.shape[1]), (0, y - fits.shape[2]),
            (0, z - fits.shape[3]))
     return jnp.pad(fits, pad)
+
+
+def fitmask_multibox_reference(occ: jnp.ndarray,
+                               boxes: Sequence[Tuple[int, int, int]]
+                               ) -> jnp.ndarray:
+    """Multi-box oracle: (B, X, Y, Z) x K boxes -> (B, K, X, Y, Z)
+    int32, one :func:`fitmask_reference` plane per box. This is the
+    arbiter the batched engine paths (numpy ``fit_mask_multi_fast``,
+    the jax fused bucket program, the Pallas kernel) are parity-tested
+    against."""
+    bsz, x, y, z = occ.shape
+    if not boxes:
+        return jnp.zeros((bsz, 0, x, y, z), jnp.int32)
+    return jnp.stack(
+        [fitmask_reference(occ, tuple(int(v) for v in b)) for b in boxes],
+        axis=1)

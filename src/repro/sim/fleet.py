@@ -16,55 +16,114 @@ through a shared :class:`QueryBroker`:
     parallelism one level up, see ``repro.eval.runner``); the threads
     exist so a simulator can *block inside its placement hot path*,
     exactly at the point where it used to call the engine inline.
-  * A blocked simulator's query parks in the broker. When every live
-    simulator is parked (nobody runnable — the cooperative step
-    boundary), the last to arrive becomes the flush leader and answers
-    the whole round with genuinely batched engine calls.
+  * A blocked simulator's query parks in the broker. Flushes are
+    **continuously scheduled** (iteration-level, in the batched-LLM-
+    serving sense): a round is answered when a *quorum* of live
+    steppers is parked, when *everyone* live is parked, or when the
+    oldest parked query exceeds a *deadline* — the fleet never stalls
+    on its slowest simulator. Queries arriving while a flush is in
+    flight simply park into the next round (they are "re-queued", not
+    lost), and up to ``max_inflight`` flushes may overlap: the engine
+    releases the GIL (XLA runs on its own threadpool; numpy kernels
+    drop it too), so overlapping flushes genuinely parallelize.
   * Coalescing rules: requests are bucketed by grid cell shape (a
     16^3 static torus never stacks with 4^3 cubes), same-bucket grids
     are concatenated on the B axis, and candidate box sets are
     unioned on K — each request gets exactly its own planes back, in
     its own box order.
+  * Compiled engines see a *small, stable* set of program shapes: per
+    bucket, B is padded to the fleet hint or the next power of two and
+    the K axis is served from a monotone per-bucket **box table** —
+    power-of-two padded while the table is still collecting boxes,
+    exact-length once it stops growing — so XLA settles on one fused
+    program per bucket instead of one per distinct flush union. The
+    pad/no-pad decision is made per bucket from the engine's declared
+    policy (``FitmaskEngine.pads_shapes``) plus bucket-local state;
+    the host numpy engine is never padded (extra grids are pure waste
+    there).
 
 Why schedules stay byte-identical to the single-sim path: every
 ``multibox``/``free_counts`` answer is a pure per-grid-per-box
 function of the submitted occupancy — batching concatenates inputs
 and slices outputs, it never mixes grids — so a simulator cannot
-observe whether its query was answered solo or in a round of twenty
-(parity-tested in ``tests/test_fleet.py``; the per-sim epoch caches
-in the torus models are untouched and keep deduplicating queries
-before they ever reach the broker).
+observe whether its query was answered solo, in a quorum round of
+three, or in a timeout round of one: *which* round answers a query
+changes with interleaving, but the answer bytes cannot (parity-tested
+across randomized interleavings, quorum fractions and timeout firings
+in ``tests/test_fleet.py``; the per-sim epoch caches in the torus
+models are untouched and keep deduplicating queries before they ever
+reach the broker).
 
 The broker implements the ``repro.core.maskquery`` client contract,
 so installing it is one call per policy (:func:`install_mask_client`).
 """
 from __future__ import annotations
 
+import hashlib
+import math
 import threading
+import time
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.core.maskquery import Box, MaskQueryClient
 
+# Engine-aware flush deadlines (seconds): the host engine answers a
+# round in a few hundred microseconds, compiled engines in a few
+# milliseconds — the deadline only exists to bound the wait for a
+# quorum that never forms, so it sits a little above one flush cost.
+_HOST_TIMEOUT = 0.002
+_COMPILED_TIMEOUT = 0.005
+
+_FC_CACHE_CAP = 4096       # content-addressed free-count entries
+_PAD_BOX: Box = (1, 1, 1)  # K filler when a bucket's table is empty
+
+# A bucket serves pow2-padded box tables while its table is growing
+# (bounding shape churn during the growth burst) and switches to the
+# exact-length table once this many consecutive flushes added no box —
+# the exact program compiles once (the compile cache keys on the box
+# tuple) and then every steady-state flush runs at exact K, paying
+# zero pad-slot arithmetic.
+_STABLE_FLUSHES = 3
+
 
 @dataclass
 class BrokerStats:
-    """Coalescing counters (the fleet bench asserts batching really
-    happened: ``batched_calls > 0`` and ``mean_grids_per_call > 1``)."""
+    """Coalescing + scheduling counters (the fleet bench asserts
+    batching really happened — ``batched_calls > 0``,
+    ``mean_grids_per_call > 1`` — and reports the flush-trigger
+    breakdown and padding-waste fractions)."""
 
-    requests: int = 0        # queries submitted by simulators
-    flushes: int = 0         # cooperative rounds answered
-    engine_calls: int = 0    # engine invocations actually issued
-    batched_calls: int = 0   # engine calls coalescing > 1 request
-    grids: int = 0           # total grids stacked on the B axis
-    max_grids: int = 0       # largest single-call B
-    max_coalesced: int = 0   # most requests answered by one call
+    requests: int = 0          # queries submitted by simulators
+    flushes: int = 0           # scheduled rounds answered
+    engine_calls: int = 0      # engine invocations actually issued
+    batched_calls: int = 0     # engine calls coalescing > 1 request
+    grids: int = 0             # real grids stacked on the B axis
+    max_grids: int = 0         # largest single-call B (real grids)
+    max_coalesced: int = 0     # most requests answered by one call
+    # -- continuous-scheduling breakdown --
+    flush_all_parked: int = 0  # rounds triggered by everyone parked
+    flush_quorum: int = 0      # rounds triggered by the quorum rule
+    flush_timeout: int = 0     # rounds triggered by the deadline
+    requeued: int = 0          # queries parked while a flush was live
+    # -- padding accounting (compiled-engine buckets) --
+    padded_grids: int = 0      # pad rows added to reach a stable B
+    k_slots: int = 0           # K slots dispatched (tables, padded)
+    k_needed: int = 0          # K slots actually requested
+    # -- free-count fast paths --
+    fc_inline: int = 0         # answered inline on the host engine
+    fc_cache_hits: int = 0     # answered from the content cache
+    fc_cache_misses: int = 0   # parked for a batched round
 
-    def record_call(self, n_requests: int, n_grids: int) -> None:
+    def record_call(self, n_requests: int, n_grids: int,
+                    n_padded: int = 0) -> None:
         self.engine_calls += 1
         self.grids += n_grids
+        self.padded_grids += n_padded
         self.max_grids = max(self.max_grids, n_grids)
         self.max_coalesced = max(self.max_coalesced, n_requests)
         if n_requests > 1:
@@ -75,11 +134,16 @@ class BrokerStats:
         d["mean_grids_per_call"] = (
             round(self.grids / self.engine_calls, 2)
             if self.engine_calls else None)
+        total_b = self.grids + self.padded_grids
+        d["b_pad_waste"] = (round(self.padded_grids / total_b, 4)
+                            if total_b else 0.0)
+        d["k_pad_waste"] = (round(1.0 - self.k_needed / self.k_slots, 4)
+                            if self.k_slots else 0.0)
         return d
 
 
 class _Request:
-    __slots__ = ("kind", "occ", "boxes", "result", "error")
+    __slots__ = ("kind", "occ", "boxes", "result", "error", "done", "t")
 
     def __init__(self, kind: str, occ: np.ndarray,
                  boxes: Optional[Tuple[Box, ...]] = None):
@@ -88,15 +152,31 @@ class _Request:
         self.boxes = boxes
         self.result: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
+        self.done = threading.Event()
+        self.t = time.monotonic()
+
+
+class _Bucket:
+    """Per-cell-shape flush state (compiled engines only): the monotone
+    box table K answers are served from, and the largest padded B this
+    bucket has dispatched (its stable batch shape)."""
+
+    __slots__ = ("table", "index", "b_target", "since_growth")
+
+    def __init__(self) -> None:
+        self.table: List[Box] = []
+        self.index: Dict[Box, int] = {}
+        self.b_target = 0
+        self.since_growth = 0  # flushes since the table last grew
 
 
 class QueryBroker(MaskQueryClient):
     """Coalesces mask queries from concurrently running simulators
-    into batched engine calls.
+    into batched engine calls, scheduled continuously.
 
     Implements the :class:`~repro.core.maskquery.MaskQueryClient`
     contract, so a torus submits work to it exactly as it would to an
-    inline client — the submitting thread just blocks until the round
+    inline client — the submitting thread just blocks until its round
     is answered. With no registered simulators (or only one live), a
     request flushes immediately: a broker is safe to use solo.
 
@@ -106,46 +186,81 @@ class QueryBroker(MaskQueryClient):
     brokered variant of the in-torus host integral-image path (the
     numpy engine is the same arithmetic, batched).
 
-    ``pad_b`` pads each stacked batch with empty grids up to the next
-    power of two, so compiled engines see a handful of stable B shapes
-    instead of retracing/recompiling every jitted program per distinct
-    flush size (coalescing round sizes vary as simulators drift apart
-    — without padding a jax-backed fleet spends its time in XLA
-    compiles). Padding rows are sliced off before answers are handed
-    back, so results are unchanged. Default ``"auto"``: pad for every
-    engine except host ``numpy``, where extra grids are pure waste.
+    Flush policy — a parked round is answered when the first of these
+    fires (the trigger breakdown lands in :class:`BrokerStats`):
+
+      * **all parked**: every live stepper is waiting (the classic
+        cooperative barrier; also fired by :meth:`deactivate`);
+      * **quorum**: at least ``max(2, ceil(quorum * live))`` steppers
+        are waiting. ``quorum=1.0`` (the default here) degenerates to
+        the barrier; fleets run ``quorum < 1`` so a round never waits
+        on its slowest member. ``quorum=0`` is *drain mode*: any
+        parked query flushes the moment an inflight slot is free —
+        batching arises from queries parking behind a live flush, not
+        from timed waiting (the host-engine policy: one engine pass
+        is so cheap that waiting on a timer always loses);
+      * **timeout**: the oldest parked query is older than ``timeout``
+        seconds (``None`` disables the deadline).
+
+    Latecomers that park while a flush is in flight join the next
+    round; up to ``max_inflight`` rounds may be answered concurrently
+    (engine calls release the GIL).
+
+    ``pad_b="auto"`` defers to the engine's ``pads_shapes`` policy:
+    compiled engines get per-bucket stable shapes — B padded up to the
+    fleet hint / bucket high-water power of two, K served from the
+    bucket's padded box table — while the host engine always sees
+    exact shapes. Padding rows and spare K slots are sliced off before
+    answers are handed back, so results are unchanged.
     """
 
-    def __init__(self, engine=None, pad_b="auto"):
+    def __init__(self, engine=None, quorum: Optional[float] = 1.0,
+                 timeout: Optional[float] = None, pad_b="auto",
+                 max_inflight: int = 2):
         from repro.kernels.fitmask import ops
         self.engine = (engine if hasattr(engine, "multibox")
                        else ops.get_engine(engine))
-        self.pad_b = (getattr(self.engine, "name", None) != "numpy"
+        self.pad_b = (bool(getattr(self.engine, "pads_shapes", False))
                       if pad_b == "auto" else bool(pad_b))
+        self.quorum = quorum
+        self.timeout = timeout
+        self.max_inflight = max(1, int(max_inflight))
+        self._host_free = bool(getattr(self.engine, "host_free", False))
+        # Mirror the engine's host-ness on the client contract so
+        # toruses can pick lazy (host) vs prefetch-all-seen (compiled)
+        # mask strategies without reaching through the broker.
+        self.host_free = self._host_free
+        self._bucketed_fn = getattr(self.engine, "multibox_bucketed",
+                                    None)
         # With a hint (the fleet sets its simulator count), batches at
         # or below it pad exactly to it: single-grid-per-sim rounds —
-        # the whole static-torus side — then share ONE compiled shape
-        # instead of one per power of two.
+        # the whole static-torus side — then share ONE compiled shape.
+        # The *effective* hint shrinks with the live population (a
+        # fleet of 8 down to 3 survivors pads to 3, not 8).
         self.pad_hint: Optional[int] = None
-        self._cv = threading.Condition()
+        self._lock = threading.Lock()
         self._active = 0
         self._pending: List[_Request] = []
+        self._inflight = 0
+        self._buckets: Dict[Tuple[int, ...], _Bucket] = {}
+        self._fc_cache: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
         self.stats = BrokerStats()
 
     # -- simulator lifecycle ------------------------------------------
     def register(self) -> None:
         """Declare one more live simulator (call before it starts)."""
-        with self._cv:
+        with self._lock:
             self._active += 1
 
     def deactivate(self) -> None:
         """A simulator finished (or died): it submits no further
-        queries. If everyone still live is already parked, their round
-        must flush now — nobody else will trigger it."""
-        with self._cv:
+        queries. If the survivors' round is now ready (all parked, or
+        quorum/deadline met), flush it — nobody else may trigger it."""
+        with self._lock:
             self._active -= 1
-            if self._pending and len(self._pending) >= self._active:
-                self._flush_locked()
+            batch = self._take_round_locked(deadline_ok=True)
+        if batch is not None:
+            self._lead(batch)
 
     # -- MaskQueryClient contract -------------------------------------
     def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
@@ -153,36 +268,111 @@ class QueryBroker(MaskQueryClient):
         return self._submit(_Request("multibox", np.asarray(occ), boxes))
 
     def free_counts(self, occ) -> np.ndarray:
-        return self._submit(_Request("free_counts", np.asarray(occ)))
+        occ = np.asarray(occ)
+        if occ.ndim != 4:
+            raise ValueError("broker expects (B, X, Y, Z) occupancy, "
+                             f"got shape {occ.shape}")
+        if self._host_free:
+            # Host reduction: cheaper than a park/flush round-trip.
+            out = np.asarray(self.engine.free_counts(occ))
+            with self._lock:
+                self.stats.requests += 1
+                self.stats.fc_inline += 1
+                self.stats.record_call(1, occ.shape[0])
+            return out.astype(np.int64)
+        key = self._fc_key(occ)
+        with self._lock:
+            hit = self._fc_cache.get(key)
+            if hit is not None:
+                self._fc_cache.move_to_end(key)
+                self.stats.requests += 1
+                self.stats.fc_cache_hits += 1
+                return hit.copy()
+            self.stats.fc_cache_misses += 1
+        return self._submit(_Request("free_counts", occ))
+
+    @staticmethod
+    def _fc_key(occ: np.ndarray) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr(occ.shape).encode())
+        h.update(np.ascontiguousarray(occ))
+        return h.digest()
 
     def _submit(self, req: _Request) -> np.ndarray:
         if req.occ.ndim != 4:
             raise ValueError("broker expects (B, X, Y, Z) occupancy, "
                              f"got shape {req.occ.shape}")
-        with self._cv:
+        with self._lock:
             self._pending.append(req)
             self.stats.requests += 1
-            if len(self._pending) >= self._active:
-                # Nobody left runnable: this thread is the flush leader.
-                self._flush_locked()
-            while req.result is None and req.error is None:
-                self._cv.wait()
+            if self._inflight:
+                self.stats.requeued += 1
+            batch = self._take_round_locked(deadline_ok=False)
+        if batch is not None:
+            self._lead(batch)
+        # Park until answered; on each deadline tick, check whether a
+        # waiting round (possibly ours, possibly a successor round) is
+        # now flushable and lead it if so.
+        tick = self.timeout
+        while not req.done.wait(tick):
+            with self._lock:
+                batch = self._take_round_locked(deadline_ok=True)
+            if batch is not None:
+                self._lead(batch)
         if req.error is not None:
             raise req.error
+        assert req.result is not None
         return req.result
 
-    # -- coalescing ----------------------------------------------------
-    def _flush_locked(self) -> None:
+    # -- continuous scheduling ----------------------------------------
+    def _take_round_locked(self,
+                           deadline_ok: bool) -> Optional[List[_Request]]:
+        """Decide (under the lock) whether a round flushes now; if so,
+        claim the batch and an inflight slot and return it. The caller
+        answers it outside the lock."""
+        n = len(self._pending)
+        if not n or self._inflight >= self.max_inflight:
+            return None
+        active = self._active
+        if active <= 0 or n >= active:
+            self.stats.flush_all_parked += 1
+        elif (self.quorum is not None and self.quorum < 1.0
+              and n >= max(1 if self.quorum <= 0.0 else 2,
+                           math.ceil(self.quorum * active))):
+            # quorum=0 is *drain mode*: any parked query flushes the
+            # moment an inflight slot is free — batching arises from
+            # queries that park while a flush is live, not from timed
+            # waiting (the right trade when one engine pass is cheap).
+            self.stats.flush_quorum += 1
+        elif (deadline_ok and self.timeout is not None
+              and time.monotonic() - self._pending[0].t >= self.timeout):
+            self.stats.flush_timeout += 1
+        else:
+            return None
         batch, self._pending = self._pending, []
+        self._inflight += 1
         self.stats.flushes += 1
-        try:
-            self._answer(batch)
-        except BaseException as e:  # noqa: BLE001 — must wake waiters
-            for r in batch:
-                if r.result is None:
-                    r.error = e
-        self._cv.notify_all()
+        return batch
 
+    def _lead(self, batch: List[_Request]) -> None:
+        """Answer rounds until none is ready: the leader that finishes
+        a flush immediately chains into any round that became flushable
+        while it was computing (its own waiters were woken the moment
+        their results landed)."""
+        while batch is not None:
+            try:
+                self._answer(batch)
+            except BaseException as e:  # noqa: BLE001 — must wake waiters
+                for r in batch:
+                    if r.result is None and r.error is None:
+                        r.error = e
+            for r in batch:
+                r.done.set()
+            with self._lock:
+                self._inflight -= 1
+                batch = self._take_round_locked(deadline_ok=True)
+
+    # -- coalescing ----------------------------------------------------
     def _answer(self, batch: List[_Request]) -> None:
         for kind in ("multibox", "free_counts"):
             reqs = [r for r in batch if r.kind == kind]
@@ -191,48 +381,133 @@ class QueryBroker(MaskQueryClient):
             by_cell: Dict[Tuple[int, ...], List[_Request]] = {}
             for r in reqs:
                 by_cell.setdefault(r.occ.shape[1:], []).append(r)
-            for group in by_cell.values():
+            for cell, group in by_cell.items():
                 if kind == "multibox":
-                    self._answer_multibox(group)
+                    self._answer_multibox(cell, group)
                 else:
-                    self._answer_free_counts(group)
+                    self._answer_free_counts(cell, group)
 
-    def _stack(self, group: List[_Request]) -> np.ndarray:
+    # Per-bucket padding plan: the decision is bucket-local, not
+    # engine-global — each bucket tracks its own stable B target (the
+    # fleet hint capped by the live population, or its high-water
+    # power of two) and its own box table.
+    def _pad_target_locked(self, bucket: _Bucket, b: int) -> int:
+        hint = self.pad_hint
+        if hint and self._active > 0:
+            hint = min(hint, self._active)
+        if hint and b <= hint:
+            target = hint
+        else:
+            target = 1 << (b - 1).bit_length()   # next power of two
+        # Never shrink below the bucket's high-water shape while the
+        # population is steady: reusing the compiled program beats
+        # saving a pad row or two.
+        if bucket.b_target >= target and (
+                not hint or bucket.b_target <= max(hint, target)):
+            target = bucket.b_target
+        bucket.b_target = target
+        return target
+
+    def _stack(self, cell: Tuple[int, ...],
+               group: List[_Request]) -> Tuple[np.ndarray, int, int]:
+        """Concatenate a bucket's grids on B; returns (stacked, real_b,
+        pad_rows). Compiled engines get the bucket's stable padded B."""
         occs = [r.occ for r in group]
         b = sum(o.shape[0] for o in occs)
+        pad = 0
         if self.pad_b:
-            if self.pad_hint and b <= self.pad_hint:
-                target = self.pad_hint
-            else:
-                target = 1 << (b - 1).bit_length()   # next power of two
+            with self._lock:
+                bucket = self._buckets.setdefault(cell, _Bucket())
+                target = self._pad_target_locked(bucket, b)
             if target > b:
-                occs.append(np.zeros((target - b,) + occs[0].shape[1:],
+                pad = target - b
+                occs.append(np.zeros((pad,) + occs[0].shape[1:],
                                      dtype=occs[0].dtype))
         if len(occs) == 1:
-            return occs[0]
-        return np.concatenate(occs, axis=0)
+            return occs[0], b, pad
+        return np.concatenate(occs, axis=0), b, pad
 
-    def _answer_multibox(self, group: List[_Request]) -> None:
+    def _boxes_for(self, cell: Tuple[int, ...],
+                   needed: Tuple[Box, ...]) -> Tuple[Tuple[Box, ...],
+                                                     Dict[Box, int]]:
+        """K plan for one flush. Host engines get exactly the needed
+        union. Compiled engines are served from the bucket's monotone
+        box table: power-of-two padded while the table is growing
+        (spare slots filled with a *duplicate* of an existing box,
+        which the fused program's trace-time dedup makes nearly free),
+        then exact-length once the table has been stable for
+        ``_STABLE_FLUSHES`` flushes — the steady state is one
+        compiled program at exact K, reused for every flush."""
+        if not self.pad_b:
+            return needed, {b: k for k, b in enumerate(needed)}
+        with self._lock:
+            bucket = self._buckets.setdefault(cell, _Bucket())
+            before = len(bucket.table)
+            for b in needed:
+                if b not in bucket.index:
+                    bucket.index[b] = len(bucket.table)
+                    bucket.table.append(b)
+            if len(bucket.table) != before:
+                bucket.since_growth = 0
+            else:
+                bucket.since_growth += 1
+            table = tuple(bucket.table)
+            if bucket.since_growth < _STABLE_FLUSHES:
+                cap = max(1, 1 << (len(table) - 1).bit_length())
+                filler = table[0] if table else _PAD_BOX
+                table = table + (filler,) * (cap - len(table))
+            kidx = dict(bucket.index)
+            self.stats.k_slots += len(table)
+            self.stats.k_needed += len(needed)
+        return table, kidx
+
+    def _call_bucketed(self, occ: np.ndarray, boxes: Tuple[Box, ...]
+                       ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """One engine pass answering planes (+ free counts when the
+        engine has a fused program)."""
+        if self._bucketed_fn is not None:
+            planes, free = self._bucketed_fn(occ, boxes)
+            return np.asarray(planes), np.asarray(free)
+        return np.asarray(self.engine.multibox(occ, boxes)), None
+
+    def _answer_multibox(self, cell: Tuple[int, ...],
+                         group: List[_Request]) -> None:
         union = tuple(sorted({b for r in group for b in r.boxes}))
-        occ = self._stack(group)
-        out = np.asarray(self.engine.multibox(occ, union))
-        self.stats.record_call(len(group),
-                              sum(r.occ.shape[0] for r in group))
-        kidx = {b: k for k, b in enumerate(union)}
+        boxes, kidx = self._boxes_for(cell, union)
+        occ, real_b, pad = self._stack(cell, group)
+        planes, free = self._call_bucketed(occ, boxes)
+        with self._lock:
+            self.stats.record_call(len(group), real_b, pad)
         lo = 0
+        fc_entries = []
         for r in group:
             hi = lo + r.occ.shape[0]
-            sub = out[lo:hi]
-            if r.boxes != union:   # this request's planes, its order
-                sub = sub[:, [kidx[b] for b in r.boxes]]
+            sub = planes[lo:hi]
+            perm = [kidx[b] for b in r.boxes]
+            if perm != list(range(sub.shape[1])):
+                sub = sub[:, perm]
             r.result = sub
+            if free is not None and not self._host_free:
+                fc_entries.append((self._fc_key(r.occ),
+                                   free[lo:hi].astype(np.int64)))
             lo = hi
+        if fc_entries:
+            # The fused program computed free counts anyway; remember
+            # them so a follow-up free_counts on the same occupancy is
+            # answered without parking.
+            with self._lock:
+                for key, val in fc_entries:
+                    self._fc_cache[key] = val
+                    self._fc_cache.move_to_end(key)
+                while len(self._fc_cache) > _FC_CACHE_CAP:
+                    self._fc_cache.popitem(last=False)
 
-    def _answer_free_counts(self, group: List[_Request]) -> None:
-        occ = self._stack(group)
+    def _answer_free_counts(self, cell: Tuple[int, ...],
+                            group: List[_Request]) -> None:
+        occ, real_b, pad = self._stack(cell, group)
         out = np.asarray(self.engine.free_counts(occ)).astype(np.int64)
-        self.stats.record_call(len(group),
-                              sum(r.occ.shape[0] for r in group))
+        with self._lock:
+            self.stats.record_call(len(group), real_b, pad)
         lo = 0
         for r in group:
             hi = lo + r.occ.shape[0]
@@ -259,7 +534,23 @@ class Fleet:
     policy with :func:`install_mask_client`, then run the simulation)
     and returning an arbitrary result. Units run on daemon threads and
     are registered with the broker *before* any of them starts, so the
-    first cooperative round already coalesces across the whole fleet.
+    first scheduled round already coalesces across the whole fleet.
+
+    ``quorum``/``timeout``/``max_inflight`` default to ``"auto"`` /
+    ``None``, which resolve engine-aware. The host engine gets drain
+    mode (``quorum=0``, one inflight lane): its rounds are never
+    padded and one engine pass is nearly free, so any parked query
+    flushes as soon as the engine is idle and batching arises from
+    queries parking behind the live flush — timed waiting on a cheap
+    engine only ever stalls mismatched-pace fleets. Compiled engines
+    keep the full barrier quorum with two inflight lanes (a
+    quorum-split round is padded back up to the stable batch shape,
+    doubling arithmetic for no latency win — bigger B per dispatch is
+    what amortizes their overhead) plus a ~5 ms deadline: it is the
+    deadline, not the quorum, that makes compiled fleets
+    *continuously* scheduled — a straggler can delay a round by at
+    most the timeout. Pass ``quorum=1.0, timeout=None`` for the
+    strict all-parked barrier.
 
     ``run`` returns per-unit results in input order; the first unit
     exception (if any) is re-raised after every thread has stopped —
@@ -267,8 +558,23 @@ class Fleet:
     among themselves rather than deadlocking.
     """
 
-    def __init__(self, engine=None):
-        self.broker = QueryBroker(engine)
+    def __init__(self, engine=None, quorum="auto", timeout="auto",
+                 max_inflight: Optional[int] = None):
+        from repro.kernels.fitmask import ops
+        eng = (engine if hasattr(engine, "multibox")
+               else ops.get_engine(engine))
+        host = bool(getattr(eng, "host_free", False))
+        if quorum == "auto":
+            quorum = 0.0 if host else 1.0
+        if timeout == "auto":
+            timeout = _HOST_TIMEOUT if host else _COMPILED_TIMEOUT
+        if max_inflight is None:
+            # Host drain mode wants exactly one engine lane: queries
+            # park behind the live flush and drain as one batch.
+            # Compiled engines overlap two (dispatch releases the GIL).
+            max_inflight = 1 if host else 2
+        self.broker = QueryBroker(eng, quorum=quorum, timeout=timeout,
+                                  max_inflight=max_inflight)
 
     def run(self, units: Sequence[Callable[[QueryBroker], Any]]) -> List[Any]:
         results: List[Any] = [None] * len(units)

@@ -7,7 +7,9 @@ import sys
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
+from repro.core import fitmask as core_fitmask
 from repro.core.allocator import make_policy
 from repro.core.reconfig import ReconfigTorus
 from repro.core.torus import StaticTorus, resolve_fitmask_engine
@@ -96,6 +98,77 @@ def test_all_engines_agree_on_single_box():
     for name in ENGINES:
         out = np.asarray(ops.fitmask(occ, (2, 3, 2), engine=name))
         assert (out == ref).all(), name
+
+
+# ---------------------------------------------- batched numpy fast path
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000),
+       st.tuples(st.integers(1, 6), st.integers(3, 9), st.integers(3, 9),
+                 st.integers(3, 9)),
+       st.integers(1, 6))
+def test_fit_mask_multi_fast_matches_oracle(seed, shape, k):
+    """The (B, K)-vectorized numpy multibox (int16 integral images,
+    nested differencing) is exact against the straight-line oracle,
+    including overhanging/infeasible boxes, and its fused free counts
+    match the host reduction."""
+    rng = np.random.default_rng(seed)
+    occ = rng.uniform(size=shape) < 0.4
+    boxes = tuple(tuple(int(v) for v in rng.integers(1, 11, size=3))
+                  for _ in range(k))
+    ref = core_fitmask.fit_mask_multi(occ, boxes)
+    fast, free = core_fitmask.fit_mask_multi_fast(occ, boxes)
+    assert fast.dtype == np.int32
+    np.testing.assert_array_equal(fast, ref)
+    np.testing.assert_array_equal(free, core_fitmask.free_counts(occ))
+
+
+def test_fit_mask_multi_fast_matches_reduce_window_reference():
+    """Batched numpy multibox vs the jax.lax.reduce_window oracle in
+    ref.py (the satellite parity contract)."""
+    import jax.numpy as jnp
+    from repro.kernels.fitmask import ref as refmod
+    occ = _occ(seed=9, shape=(3, 7, 6, 5))
+    boxes = ((1, 1, 1), (2, 3, 2), (7, 6, 5), (8, 1, 1), (3, 3, 3))
+    fast, _ = core_fitmask.fit_mask_multi_fast(occ, boxes)
+    oracle = np.asarray(
+        refmod.fitmask_multibox_reference(jnp.asarray(occ), boxes))
+    np.testing.assert_array_equal(fast, oracle)
+
+
+def test_fit_mask_multi_fast_large_grid_uses_wide_accumulator():
+    """32^3 cells overflow int16 — the wide-accumulator fallback stays
+    exact."""
+    rng = np.random.default_rng(5)
+    occ = rng.uniform(size=(2, 32, 32, 32)) < 0.5
+    boxes = ((5, 5, 5), (32, 32, 32), (1, 1, 33))
+    ref = core_fitmask.fit_mask_multi(occ, boxes)
+    fast, free = core_fitmask.fit_mask_multi_fast(occ, boxes)
+    np.testing.assert_array_equal(fast, ref)
+    np.testing.assert_array_equal(free, core_fitmask.free_counts(occ))
+
+
+def test_all_engines_agree_on_multibox_bucketed():
+    """The broker's fused flush entry: planes are nonzero-where-fits
+    (dtype is the engine's choice) and the free counts ride along."""
+    occ = _occ(seed=12)
+    ref = ops.get_engine("numpy").multibox(occ, BOXES)
+    fc = np.asarray(ops.get_engine("numpy").free_counts(occ))
+    for name in ENGINES:
+        planes, free = ops.get_engine(name).multibox_bucketed(occ, BOXES)
+        np.testing.assert_array_equal(np.asarray(planes) != 0, ref != 0,
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(free).astype(np.int64),
+                                      fc, err_msg=name)
+
+
+def test_jax_compile_caches_are_bounded():
+    """Satellite: the per-box and per-bucket program caches are LRU
+    with a size cap, not unbounded functools.cache — long multi-shape
+    sweeps cannot grow them without limit."""
+    info = ops.JaxEngine._window_fn.cache_info()
+    assert info.maxsize == ops.WINDOW_CACHE_SIZE
+    info = ops.JaxEngine._bucket_fn.cache_info()
+    assert info.maxsize == ops.BUCKET_CACHE_SIZE
 
 
 # ------------------------------------------------------- numpy purity
