@@ -18,9 +18,8 @@ import os
 import time
 from typing import Dict
 
-from repro.eval import (EvalRunner, aggregate_by_label, fig3, fig4,
-                        make_tasks, table1)
-from repro.eval.aggregate import PAPER_TABLE1
+from repro.api import (PAPER_TABLE1, EvalRunner, aggregate_by_label, fig3,
+                       fig4, make_tasks, table1)
 
 # Policy matrix as evaluated by the paper.
 TABLE1_CONFIGS = [

@@ -205,6 +205,50 @@ def fleet_table(path: str = "BENCH_fleet.json") -> str:
     return "\n".join(lines)
 
 
+def service_table(path: str = "BENCH_service.json") -> str:
+    """Allocator service: daemon parity, p99 placement latency under
+    Poisson load, admission under overload."""
+    with open(path) as f:
+        bench = json.load(f)
+    lines = []
+    par = bench.get("parity", {})
+    if par.get("configs"):
+        lines.append("| policy | jobs | byte-identical | remote s |")
+        lines.append("|---|---|---|---|")
+        for r in par["configs"]:
+            lines.append(f"| {r['label']} | {r['jobs']} | "
+                         f"{r['identical']} | {r['remote_s']} |")
+    lat = bench.get("latency", {})
+    if lat:
+        rem, loc = lat.get("remote", {}), lat.get("local", {})
+        lines.append(
+            f"\nLatency ({lat.get('jobs')} Poisson jobs, "
+            f"{rem.get('rpcs')} RPCs): remote submit p50 "
+            f"{rem.get('submit_p50_ms')}ms / p99 "
+            f"{rem.get('submit_p99_ms')}ms vs in-process p99 "
+            f"{loc.get('submit_p99_ms')}ms -> service overhead p99 "
+            f"{lat.get('overhead_p99_ms')}ms")
+    adm = bench.get("admission", {})
+    if adm:
+        c = adm.get("counts", {})
+        lines.append(
+            f"\nAdmission (flood {adm.get('flood')}, queue cap "
+            f"{adm.get('max_queue')}): {c.get('placed')} placed / "
+            f"{c.get('queued')} queued / {c.get('rejected')} rejected, "
+            f"depth bounded={adm.get('depth_bounded')}, rejects "
+            f"stateless={adm.get('rejects_stateless')}, status under "
+            f"load {adm.get('status_under_load_ms')}ms")
+    head = bench.get("headline", {})
+    if head:
+        lines.append(
+            f"\nHeadline: p99 {head.get('p99_ms')}ms, service overhead "
+            f"{head.get('overhead_p99_ms')}ms "
+            f"(<= {head.get('threshold_ms')}ms), "
+            f"parity={head.get('parity')}, "
+            f"admission={head.get('admission')} -> pass={head.get('pass')}")
+    return "\n".join(lines)
+
+
 def bench_table(alloc_path: str = "BENCH_allocator.json",
                 eval_path: str = "BENCH_paper_eval.json") -> str:
     """Perf trajectory: placement-engine rates (BENCH_allocator.json)
@@ -247,7 +291,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
                     choices=["all", "dryrun", "roofline", "paper", "bench",
-                             "fitmask", "reconfig", "fleet"])
+                             "fitmask", "reconfig", "fleet", "service"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -275,6 +319,10 @@ def main() -> None:
             os.path.exists("BENCH_fleet.json"):
         print("\n### Fleet-batched eval (BENCH_fleet.json)\n")
         print(fleet_table())
+    if args.which in ("all", "service") and \
+            os.path.exists("BENCH_service.json"):
+        print("\n### Allocator service (BENCH_service.json)\n")
+        print(service_table())
 
 
 if __name__ == "__main__":

@@ -26,12 +26,13 @@ def main() -> None:
     ap.add_argument("--skip-fitmask", action="store_true")
     ap.add_argument("--skip-reconfig", action="store_true")
     ap.add_argument("--skip-fleet", action="store_true")
+    ap.add_argument("--skip-service", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
     from benchmarks import (allocator_bench, fitmask_bench, fleet_bench,
                             kernels_bench, paper_eval, reconfig_bench,
-                            roofline)
+                            roofline, service_bench)
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -78,6 +79,19 @@ def main() -> None:
         else:
             fleet_bench.main(["--quick", "--out",
                               "experiments/BENCH_fleet_quick.json"])
+
+    if not args.skip_service:
+        print("=" * 70)
+        print("## Allocator-service benchmark (daemon parity / p99 "
+              "latency / admission)")
+        # Same snapshot policy as the other benches: the tracked
+        # BENCH_service.json is the full sweep; CI-sized runs smoke the
+        # quick variant into experiments/.
+        if args.full:
+            service_bench.main(["--out", "BENCH_service.json"])
+        else:
+            service_bench.main(["--quick", "--out",
+                                "experiments/BENCH_service_quick.json"])
 
     if not args.skip_fitmask:
         print("=" * 70)

@@ -3,11 +3,8 @@ one folded placement inspected end to end.
 
   PYTHONPATH=src python examples/rfold_scheduling.py
 """
-from repro.core.allocator import make_policy
-from repro.core.geometry import JobShape
-from repro.sim.metrics import summarize
-from repro.sim.simulator import Simulator
-from repro.traces.generator import TraceConfig, generate_trace
+from repro.api import (JobShape, Simulator, TraceConfig, generate_trace,
+                       make_policy, summarize)
 
 
 def main():

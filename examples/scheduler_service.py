@@ -1,0 +1,44 @@
+"""Allocator-as-a-service demo: a live scheduling daemon, streaming
+submissions, and pushed SETUP/RECONFIG/RELEASE topology events.
+
+  PYTHONPATH=src python examples/scheduler_service.py
+"""
+from repro.api import Scheduler, TraceConfig, generate_trace
+
+
+def main():
+    trace = generate_trace(TraceConfig(num_jobs=12, seed=7,
+                                       cluster_xpus=512, size_max=512))
+    with Scheduler(policy="rfold",
+                   policy_kw=dict(num_xpus=512, cube_n=4),
+                   max_queue=4) as sched:
+        print("daemon listening on %s:%d" % tuple(sched.address))
+        running = []
+        for job in trace:
+            r = sched.submit(job.shape, job_id=job.job_id)
+            print(f"submit job {job.job_id} {'x'.join(map(str, job.shape.dims))}"
+                  f" -> {r['outcome']}")
+            if r["outcome"] == "placed":
+                running.append(job.job_id)
+            elif r["outcome"] == "rejected" and running:
+                # Overloaded: retire the oldest running job, retry once.
+                done = sched.done(running.pop(0))
+                for st in done["started"]:
+                    print(f"  queue drained: job {st['job_id']} "
+                          f"-> {st['outcome']}")
+                r = sched.submit(job.shape, job_id=job.job_id)
+                print(f"  resubmit -> {r['outcome']}")
+                if r["outcome"] == "placed":
+                    running.append(job.job_id)
+        for ev in sched.events(max_wait=0.2):
+            detail = ev.get("detail", {})
+            extra = (f" ocs_links={detail['ocs_links']}"
+                     if "ocs_links" in detail else "")
+            print(f"event {ev['event']:8s} job {ev['job_id']}{extra}")
+        st = sched.status()
+        print(f"final: {st['allocated']} allocated, "
+              f"{st['queue_depth']} queued, util={st['utilization']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""The public API of the RFold reproduction.
+
+One import surface for everything downstream code needs — examples,
+``benchmarks/``, notebooks — so callers stop reaching into
+``repro.core``/``repro.sim`` internals:
+
+    from repro import api
+
+    with api.Scheduler(policy="rfold") as sched:     # live service
+        r = sched.submit((4, 4, 4))
+        for ev in sched.events(max_wait=0.1):
+            ...
+
+    jobs = api.generate_trace(api.TraceConfig(num_jobs=100))
+    result = api.Simulator(api.make_policy("rfold"), jobs).run()
+
+Module-level :func:`submit` / :func:`events` operate on a default
+process-wide scheduler (started on first use, configurable via
+:func:`start_scheduler`) for scripts that just want a live allocator
+without managing lifecycles.
+
+Everything re-exported here is covered by the parity and round-trip
+tests; internals not listed in ``__all__`` may move without notice.
+"""
+from __future__ import annotations
+
+import atexit
+import threading
+from typing import Any, Dict, List, Optional
+
+# Engine selection (the one resolution point for fitmask engines).
+from repro.core.engineconfig import (EngineConfig, default_engine_name,
+                                     set_default_engine)
+# Placement policies + geometry.
+from repro.core.allocator import POLICIES, Placement, PlacementPolicy, make_policy
+from repro.core.events import EventLog, TopologyEvent
+from repro.core.geometry import JobShape
+# Discrete-event simulation + traces + metrics.
+from repro.sim.job import Job
+from repro.sim.metrics import summarize, utilization_cdf
+from repro.sim.simulator import SimResult, Simulator
+from repro.traces.generator import TraceConfig, generate_trace, generate_traces
+# Paper-scale evaluation.
+from repro.eval import (PAPER_FIG3_RATIOS, PAPER_FIG4_DELTAS, PAPER_TABLE1,
+                        EvalRunner, EvalTask, aggregate_by_label, fig3, fig4,
+                        make_tasks, table1)
+# The allocator service.
+from repro.serve.scheduler import (RemotePolicy, Scheduler, SchedulerClient,
+                                   SchedulerConfig)
+
+__all__ = [
+    # service
+    "Scheduler", "SchedulerConfig", "SchedulerClient", "RemotePolicy",
+    "submit", "events", "start_scheduler", "stop_scheduler",
+    # engine selection
+    "EngineConfig", "set_default_engine", "default_engine_name",
+    # placement
+    "POLICIES", "make_policy", "PlacementPolicy", "Placement", "JobShape",
+    "TopologyEvent", "EventLog",
+    # simulation
+    "Simulator", "SimResult", "Job", "summarize", "utilization_cdf",
+    "TraceConfig", "generate_trace", "generate_traces",
+    # evaluation
+    "EvalRunner", "EvalTask", "make_tasks", "aggregate_by_label",
+    "table1", "fig3", "fig4",
+    "PAPER_TABLE1", "PAPER_FIG3_RATIOS", "PAPER_FIG4_DELTAS",
+]
+
+# -- default process-wide scheduler ------------------------------------
+
+_default_lock = threading.Lock()
+_default_scheduler: Optional[Scheduler] = None
+
+
+def start_scheduler(config: Optional[SchedulerConfig] = None,
+                    **config_kw) -> Scheduler:
+    """Start (or return) the process-wide default scheduler used by
+    module-level :func:`submit`/:func:`events`. Explicit config is only
+    honoured on first start — stop the old one to reconfigure."""
+    global _default_scheduler
+    with _default_lock:
+        if _default_scheduler is None:
+            _default_scheduler = Scheduler(config, **config_kw).start()
+            atexit.register(stop_scheduler)
+        elif config is not None or config_kw:
+            raise RuntimeError(
+                "default scheduler already running; stop_scheduler() "
+                "before starting one with a different config")
+        return _default_scheduler
+
+
+def stop_scheduler() -> None:
+    """Gracefully stop the default scheduler (idempotent)."""
+    global _default_scheduler
+    with _default_lock:
+        if _default_scheduler is not None:
+            _default_scheduler.stop()
+            _default_scheduler = None
+
+
+def submit(shape, job_id: Optional[int] = None) -> Dict[str, Any]:
+    """Submit a job shape to the default scheduler (started on first
+    use with default config: RFold on the paper's 4096-XPU cluster)."""
+    return start_scheduler().submit(shape, job_id=job_id)
+
+
+def events(max_wait: float = 0.0) -> List[Dict[str, Any]]:
+    """Drain pushed SETUP/RECONFIG/RELEASE events from the default
+    scheduler."""
+    return start_scheduler().events(max_wait=max_wait)

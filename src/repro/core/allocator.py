@@ -97,9 +97,11 @@ class PlacementPolicy:
 
 class _StaticBase(PlacementPolicy):
     def __init__(self, dims: Dims = (16, 16, 16),
-                 fitmask_engine: Optional[str] = None):
+                 fitmask_engine: Optional[str] = None,
+                 engine=None, mask_client=None):
         super().__init__()
-        self.torus = StaticTorus(dims, fitmask_engine=fitmask_engine)
+        self.torus = StaticTorus(dims, fitmask_engine=fitmask_engine,
+                                 engine=engine, mask_client=mask_client)
 
     def _candidate_boxes(self, folds) -> List[Dims]:
         """Distinct in-bounds fold boxes — one allocator step's fit-mask
@@ -161,8 +163,11 @@ class FirstFitPolicy(_StaticBase):
     name = "firstfit"
 
     def empty_clone(self) -> "FirstFitPolicy":
+        # Clones are throwaway feasibility probes: they inherit the
+        # engine config but never the mask client (a brokered client
+        # would park a query for a cluster nobody registered).
         return FirstFitPolicy(self.torus.dims,
-                              fitmask_engine=self.torus.fitmask_engine)
+                              engine=self.torus.engine_config)
 
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
         folds = [f for f in enumerate_folds(shape,
@@ -192,7 +197,7 @@ class FoldingPolicy(_StaticBase):
 
     def empty_clone(self) -> "FoldingPolicy":
         return FoldingPolicy(self.torus.dims,
-                             fitmask_engine=self.torus.fitmask_engine)
+                             engine=self.torus.engine_config)
 
     def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
         candidates = []
@@ -224,11 +229,13 @@ class FoldingPolicy(_StaticBase):
 class _ReconfigBase(PlacementPolicy):
     def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
                  dedicate_chained: bool = False,
-                 fitmask_engine: Optional[str] = None):
+                 fitmask_engine: Optional[str] = None,
+                 engine=None, mask_client=None):
         super().__init__()
         self.cluster = ReconfigTorus(num_xpus, cube_n,
                                      dedicate_chained=dedicate_chained,
-                                     fitmask_engine=fitmask_engine)
+                                     fitmask_engine=fitmask_engine,
+                                     engine=engine, mask_client=mask_client)
 
     @property
     def num_xpus(self) -> int:
@@ -326,7 +333,7 @@ class ReconfigPolicy(_ReconfigBase):
     def empty_clone(self) -> "ReconfigPolicy":
         return ReconfigPolicy(self.cluster.num_xpus, self.cluster.cube_n,
                               dedicate_chained=self.cluster.dedicate_chained,
-                              fitmask_engine=self.cluster.fitmask_engine)
+                              engine=self.cluster.engine_config)
 
     def _folds(self, shape: JobShape) -> List[Fold]:
         return self._dedupe_rotations([
@@ -343,7 +350,7 @@ class RFoldPolicy(_ReconfigBase):
     def empty_clone(self) -> "RFoldPolicy":
         return RFoldPolicy(self.cluster.num_xpus, self.cluster.cube_n,
                            dedicate_chained=self.cluster.dedicate_chained,
-                           fitmask_engine=self.cluster.fitmask_engine)
+                           engine=self.cluster.engine_config)
 
     def _folds(self, shape: JobShape) -> List[Fold]:
         return self._dedupe_rotations(
@@ -363,10 +370,12 @@ class RFoldBestEffortPolicy(RFoldPolicy):
     def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
                  dedicate_chained: bool = False,
                  scatter_slowdown: float = 1.5,
-                 fitmask_engine: Optional[str] = None):
+                 fitmask_engine: Optional[str] = None,
+                 engine=None, mask_client=None):
         super().__init__(num_xpus, cube_n,
                          dedicate_chained=dedicate_chained,
-                         fitmask_engine=fitmask_engine)
+                         fitmask_engine=fitmask_engine,
+                         engine=engine, mask_client=mask_client)
         self.scatter_slowdown = scatter_slowdown
 
     def empty_clone(self) -> "RFoldBestEffortPolicy":
@@ -374,7 +383,7 @@ class RFoldBestEffortPolicy(RFoldPolicy):
             self.cluster.num_xpus, self.cluster.cube_n,
             dedicate_chained=self.cluster.dedicate_chained,
             scatter_slowdown=self.scatter_slowdown,
-            fitmask_engine=self.cluster.fitmask_engine)
+            engine=self.cluster.engine_config)
 
     def _can_ever_place(self, shape: JobShape) -> bool:
         if super()._can_ever_place(shape):

@@ -93,14 +93,17 @@ class InlineMaskClient(MaskQueryClient):
 _INLINE: Dict[int, InlineMaskClient] = {}
 
 
-def resolve_mask_client(name: Optional[str]) -> Optional[InlineMaskClient]:
+def resolve_mask_client(selection=None) -> Optional[InlineMaskClient]:
     """Resolve an engine selection to an inline client: ``None`` for
     the builtin numpy host path (which must stay free of indirection
     and jax imports), a cached :class:`InlineMaskClient` otherwise.
-    ``name=None`` defers to the registry default
-    (``REPRO_FITMASK_ENGINE`` env var / ``set_default_engine``)."""
+    ``selection`` is an engine name, an
+    :class:`~repro.core.engineconfig.EngineConfig`, or ``None`` — all
+    resolved through ``EngineConfig.resolve_name()``, the single
+    selection point (set_default_engine > deprecated env var > numpy)."""
+    from repro.core.engineconfig import EngineConfig
     from repro.kernels.fitmask import ops  # numpy-only at import time
-    name = name or ops.default_engine_name()
+    name = EngineConfig.coerce(selection).resolve_name()
     if name == "numpy":
         return None
     engine = ops.get_engine(name)

@@ -46,12 +46,15 @@ from __future__ import annotations
 
 import functools
 import itertools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import events as _events
 from . import fitmask
+from .engineconfig import EngineConfig
 from .folding import Fold, WrapFlags, verify_fold
 from .geometry import Coord, Dims, volume
 
@@ -262,16 +265,25 @@ class ReconfigTorus:
 
     def __init__(self, num_xpus: int = 4096, cube_n: int = 4,
                  dedicate_chained: bool = False,
-                 fitmask_engine: Optional[str] = None):
+                 fitmask_engine: Optional[str] = None,
+                 engine=None, mask_client=None, listeners=None):
         if num_xpus % (cube_n ** 3):
             raise ValueError("num_xpus must be a multiple of cube volume")
-        # Free-block search backend (repro.kernels.fitmask.ops registry).
-        # None defers to REPRO_FITMASK_ENGINE / the registry default;
-        # "numpy" keeps the pure-host path below.
-        self.fitmask_engine = fitmask_engine
-        # Installed request/response client (repro.core.maskquery); the
-        # fleet layer points many clusters at one shared query broker.
-        self.mask_client = None
+        # Free-block search backend: an EngineConfig / registry name /
+        # None for the resolved default (``fitmask_engine`` is the
+        # retained legacy spelling); "numpy" keeps the pure-host path.
+        self.engine_config = EngineConfig.coerce(
+            engine if engine is not None else fitmask_engine)
+        self.fitmask_engine = self.engine_config.engine
+        # Request/response client (repro.core.maskquery), injected at
+        # construction; the fleet layer points many clusters at one
+        # shared query broker.
+        self.mask_client = mask_client
+        # Topology-event listeners (repro.core.events): notified on
+        # every commit/release; OCS-wiring changes (multi-cube chains,
+        # wrap closures) are flagged ``reconfigured`` so a scheduler
+        # service can push RECONFIG. Empty list = zero-cost.
+        self.listeners: List[_events.Listener] = list(listeners or [])
         # If True, a cube chained into a multi-cube job is exclusively
         # owned by it (strands leftover XPUs). Default False: the OCS is
         # per-face-position, so leftover sub-blocks stay usable — this
@@ -315,11 +327,19 @@ class ReconfigTorus:
 
     # ------------------------------------------------------------------
     def set_mask_client(self, client) -> None:
-        """Install a request/response mask client (e.g. the fleet
-        layer's query broker): every sub-block freeness / free-count
-        query is *submitted* to it instead of computed inline, even
-        when the registry default is the numpy host engine. ``None``
-        restores per-query engine resolution."""
+        """Deprecated: pass ``mask_client=`` to the constructor (or to
+        ``make_policy``) instead. Delegates to the internal setter."""
+        warnings.warn(
+            "set_mask_client is deprecated; pass mask_client= to the "
+            "ReconfigTorus/policy constructor", DeprecationWarning,
+            stacklevel=2)
+        self._set_mask_client(client)
+
+    def _set_mask_client(self, client) -> None:
+        """Swap the request/response mask client: every sub-block
+        freeness / free-count query is *submitted* to it instead of
+        computed inline, even when the registry default is the numpy
+        host engine. ``None`` restores per-query engine resolution."""
         self.mask_client = client
         self._cache_epoch = -1     # cached masks belong to the old route
         self._dirty = None
@@ -330,7 +350,7 @@ class ReconfigTorus:
         if self.mask_client is not None:
             return self.mask_client
         from .maskquery import resolve_mask_client
-        return resolve_mask_client(self.fitmask_engine)
+        return resolve_mask_client(self.engine_config)
 
     def bump_epoch(self) -> None:
         """Invalidate cached occupancy-derived state (call after any
@@ -818,9 +838,16 @@ class ReconfigTorus:
             "broken_rings": plan.broken_rings,
             "num_cubes": plan.num_cubes, "ocs_links": plan.num_ocs_links,
         }
+        if self.listeners:
+            _events.emit(self.listeners, _events.TopologyEvent(
+                kind="setup", job_id=job_id, topology="reconfig",
+                reconfigured=plan.num_ocs_links > 0,
+                detail={"cubes": sorted(p.cube_id for p in plan.pieces),
+                        **self.alloc_meta[job_id]}))
 
     def release(self, job_id: int) -> None:
         pieces = self.allocations.pop(job_id)
+        meta = self.alloc_meta.get(job_id, {})
         for p in pieces:
             (x0, x1), (y0, y1), (z0, z1) = p.local
             self.occ[p.cube_id, x0:x1, y0:y1, z0:z1] = False
@@ -829,6 +856,14 @@ class ReconfigTorus:
             self._busy -= p.size
         self._mark_dirty(p.cube_id for p in pieces)
         self.alloc_meta.pop(job_id, None)
+        if self.listeners:
+            # Releasing a chained job frees its OCS wiring — that, too,
+            # is a reconfiguration of the switch layer.
+            _events.emit(self.listeners, _events.TopologyEvent(
+                kind="release", job_id=job_id, topology="reconfig",
+                reconfigured=int(meta.get("ocs_links", 0) or 0) > 0,
+                detail={"cubes": sorted({p.cube_id for p in pieces}),
+                        "ocs_links": meta.get("ocs_links", 0)}))
 
     # ------------------------------------------------------------------
     def free_cells(self, limit: int):
@@ -862,6 +897,11 @@ class ReconfigTorus:
         self.allocations[job_id] = pieces
         self.alloc_meta[job_id] = {"kind": "scatter",
                                    "num_cubes": len({c[0] for c in cells})}
+        if self.listeners:
+            _events.emit(self.listeners, _events.TopologyEvent(
+                kind="setup", job_id=job_id, topology="reconfig",
+                detail={"cubes": sorted({c[0] for c in cells}),
+                        **self.alloc_meta[job_id]}))
 
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:

@@ -9,12 +9,15 @@ exclusivity on every commit.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Iterable, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import events as _events
 from . import maskquery
+from .engineconfig import EngineConfig
 from .geometry import Coord, Dims, is_torus_neighbor, iter_box, volume
 
 Link = Tuple[Coord, Coord]
@@ -58,17 +61,31 @@ class StaticTorus:
     """A D1×D2×D3 torus with full wrap-around on every axis whose size
     equals the torus dimension. Occupancy is a numpy bool grid.
 
-    ``fitmask_engine`` selects the free-box search backend (see
-    ``repro.kernels.fitmask.ops``): the default ``numpy`` engine keeps
-    the host integral-image path; accelerator engines answer all
-    candidate boxes of an epoch in one multi-box pass."""
+    ``engine`` selects the free-box search backend — an
+    :class:`~repro.core.engineconfig.EngineConfig`, a registry name, or
+    None for the resolved default (``fitmask_engine`` is the retained
+    legacy spelling): the default ``numpy`` engine keeps the host
+    integral-image path; accelerator engines answer all candidate boxes
+    of an epoch in one multi-box pass. ``mask_client`` injects a
+    request/response client (e.g. the fleet broker) at construction —
+    the post-hoc :meth:`set_mask_client` mutation is deprecated."""
 
-    def __init__(self, dims: Dims, fitmask_engine: Optional[str] = None):
+    def __init__(self, dims: Dims, fitmask_engine: Optional[str] = None,
+                 engine=None, mask_client=None, listeners=None):
         self.dims: Dims = tuple(int(d) for d in dims)  # type: ignore[assignment]
-        self.fitmask_engine = fitmask_engine
-        # Installed request/response client (repro.core.maskquery).
-        # None: resolve per query (engine registry / numpy host path).
-        self.mask_client: Optional[maskquery.MaskQueryClient] = None
+        self.engine_config = EngineConfig.coerce(
+            engine if engine is not None else fitmask_engine)
+        # Back-compat attribute: the raw engine selection (None = the
+        # resolved registry default), as call sites historically read.
+        self.fitmask_engine = self.engine_config.engine
+        # Request/response client (repro.core.maskquery), injected at
+        # construction. None: resolve per query from the engine config
+        # (engine registry / numpy host path).
+        self.mask_client: Optional[maskquery.MaskQueryClient] = mask_client
+        # Topology-event listeners (repro.core.events): notified on
+        # every commit/release so a scheduler service can push
+        # SETUP/RELEASE messages. Empty list = zero-cost.
+        self.listeners: List[_events.Listener] = list(listeners or [])
         self.occ = np.zeros(self.dims, dtype=bool)
         self.owner = np.full(self.dims, -1, dtype=np.int64)
         self.link_owner: Dict[Link, int] = {}
@@ -92,12 +109,19 @@ class StaticTorus:
 
     # ------------------------------------------------------------------
     def set_mask_client(self, client) -> None:
-        """Install a request/response mask client (e.g. the fleet
-        layer's query broker). With a client installed every mask
-        query rides the engine path — *submitted* to the client
-        instead of computed inline — even when the registry default
-        is the numpy host engine. ``None`` restores per-query engine
-        resolution."""
+        """Deprecated: pass ``mask_client=`` to the constructor (or to
+        ``make_policy``) instead. Delegates to the internal setter."""
+        warnings.warn(
+            "set_mask_client is deprecated; pass mask_client= to the "
+            "StaticTorus/policy constructor", DeprecationWarning,
+            stacklevel=2)
+        self._set_mask_client(client)
+
+    def _set_mask_client(self, client) -> None:
+        """Swap the request/response mask client. With a client every
+        mask query rides the engine path — *submitted* instead of
+        computed inline — even when the registry default is the numpy
+        host engine. ``None`` restores per-query engine resolution."""
         self.mask_client = client
         self._fit_epoch = -1   # cached masks belong to the old route
 
@@ -107,7 +131,7 @@ class StaticTorus:
         (the numpy host integral-image path below)."""
         if self.mask_client is not None:
             return self.mask_client
-        return maskquery.resolve_mask_client(self.fitmask_engine)
+        return maskquery.resolve_mask_client(self.engine_config)
 
     def bump_epoch(self) -> None:
         """Invalidate cached occupancy-derived state (call after any
@@ -288,6 +312,11 @@ class StaticTorus:
         self._busy += len(coords)
         alloc = Allocation(job_id, coords, links, dict(meta or {}))
         self.allocations[job_id] = alloc
+        if self.listeners:
+            _events.emit(self.listeners, _events.TopologyEvent(
+                kind="setup", job_id=job_id, topology="static",
+                detail={"num_xpus": len(coords),
+                        "num_links": len(links), **alloc.meta}))
         return alloc
 
     def commit_box(self, job_id: int, origin: Coord, box: Dims,
@@ -307,6 +336,11 @@ class StaticTorus:
             del self.link_owner[l]
         self._epoch += 1
         self._busy -= len(alloc.coords)
+        if self.listeners:
+            _events.emit(self.listeners, _events.TopologyEvent(
+                kind="release", job_id=job_id, topology="static",
+                detail={"num_xpus": len(alloc.coords),
+                        "num_links": len(alloc.links)}))
 
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:

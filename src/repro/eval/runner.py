@@ -202,10 +202,11 @@ def run_task(task: EvalTask, mask_client=None) -> Dict:
     cfg = TraceConfig(num_jobs=task.num_jobs, seed=task.seed,
                       target_load=task.load, **task.trace_kw)
     jobs = generate_trace(cfg)
-    policy = make_policy(task.policy, **task.policy_kw)
-    if mask_client is not None:
-        from repro.sim.fleet import install_mask_client
-        install_mask_client(policy, mask_client)
+    # Constructor injection: the client rides in with the policy
+    # rather than being bolted on post-construction (the deprecated
+    # install_mask_client dance).
+    policy = make_policy(task.policy, mask_client=mask_client,
+                         **task.policy_kw)
     t0 = time.perf_counter()
     res = Simulator(policy, jobs, **task.sim_kw).run()
     wall = time.perf_counter() - t0
@@ -319,10 +320,22 @@ class EvalRunner:
     def __init__(self, checkpoint_dir: Optional[str] = None,
                  workers: Optional[int] = None, emit=None,
                  fleet_size="auto", fleet_engine: Optional[str] = None,
-                 fleet_quorum="auto", fleet_timeout="auto"):
+                 fleet_quorum="auto", fleet_timeout="auto",
+                 engine=None):
         self.checkpoint_dir = checkpoint_dir
         self.workers = os.cpu_count() if workers is None else workers
         self.emit = emit or (lambda *a: None)
+        # ``engine`` is the typed spelling (repro.core.engineconfig.
+        # EngineConfig): one value for backend + fleet drive. The four
+        # scattered fleet_* kwargs are retained as legacy aliases; an
+        # explicit EngineConfig wins over all of them.
+        if engine is not None:
+            from repro.core.engineconfig import EngineConfig
+            cfg = EngineConfig.coerce(engine)
+            fleet_size = cfg.fleet_size
+            fleet_engine = cfg.engine
+            fleet_quorum = cfg.quorum
+            fleet_timeout = cfg.timeout
         self.fleet_size = fleet_size
         self.fleet_engine = fleet_engine
         self.fleet_quorum = fleet_quorum

@@ -28,17 +28,19 @@ runs never rebuild the host integral image.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Dict, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
+from repro.core import engineconfig as _engineconfig
 from repro.core import fitmask as np_engine
 
 Box = Tuple[int, int, int]
 
-ENGINE_ENV = "REPRO_FITMASK_ENGINE"
-_default_engine: Optional[str] = None
+# Selection order (explicit > set_default_engine > deprecated env var
+# > numpy) lives in repro.core.engineconfig — the single resolution
+# point; the names below are retained delegating spellings.
+ENGINE_ENV = _engineconfig.ENGINE_ENV
 
 # Compile-cache caps. Per-box window programs and per-bucket fused
 # programs are cached per distinct key; a long multi-shape sweep keeps
@@ -360,28 +362,14 @@ def available_engines() -> Tuple[str, ...]:
 
 
 def set_default_engine(name: Optional[str]) -> None:
-    """Process-wide default (overrides the env var); None resets to
-    env-var/``numpy`` resolution."""
-    if name is not None:
-        name = _ALIASES.get(name, name)
-        if name not in _REGISTRY:
-            raise KeyError(f"unknown fitmask engine {name!r}; "
-                           f"have {available_engines()}")
-    global _default_engine
-    _default_engine = name
+    """Process-wide default (overrides the deprecated env var); None
+    resets to env-var/``numpy`` resolution. Delegates to
+    ``repro.core.engineconfig`` — the single selection point."""
+    _engineconfig.set_default_engine(name)
 
 
 def default_engine_name() -> str:
-    if _default_engine is not None:
-        return _default_engine
-    env = os.environ.get(ENGINE_ENV, "").strip()
-    if env:
-        name = _ALIASES.get(env, env)
-        if name not in _REGISTRY:
-            raise KeyError(f"{ENGINE_ENV}={env!r} names no engine; "
-                           f"have {available_engines()}")
-        return name
-    return "numpy"
+    return _engineconfig.default_engine_name()
 
 
 def get_engine(name: Optional[str] = None) -> FitmaskEngine:

@@ -1,0 +1,38 @@
+"""Allocator-as-a-service: long-lived scheduling daemon + clients.
+
+Layers (each importable on its own):
+
+  * :mod:`.protocol` — JSON-lines wire format and outcome constants.
+  * :mod:`.core`     — :class:`SchedulerConfig` + :class:`AllocatorCore`
+                       (policy, FIFO queue, admission, op journal,
+                       checkpoint recovery via the eval store).
+  * :mod:`.daemon`   — :class:`SchedulerDaemon`, the asyncio server.
+  * :mod:`.client`   — :class:`SchedulerClient` (blocking socket) and
+                       :class:`RemotePolicy` (simulator adapter).
+  * :mod:`.service`  — :class:`Scheduler`, the thread-hosted facade.
+
+Most callers want :class:`Scheduler` via :mod:`repro.api`.
+"""
+from __future__ import annotations
+
+from .client import RemotePolicy, SchedulerClient
+from .core import AllocatorCore, SchedulerConfig
+from .daemon import SchedulerDaemon
+from .protocol import DROPPED, EV_RECONFIG, EV_RELEASE, EV_SETUP, PLACED, QUEUED, REJECTED
+from .service import Scheduler
+
+__all__ = [
+    "AllocatorCore",
+    "RemotePolicy",
+    "Scheduler",
+    "SchedulerClient",
+    "SchedulerConfig",
+    "SchedulerDaemon",
+    "PLACED",
+    "QUEUED",
+    "DROPPED",
+    "REJECTED",
+    "EV_SETUP",
+    "EV_RECONFIG",
+    "EV_RELEASE",
+]

@@ -1,0 +1,231 @@
+"""Blocking client for the allocator daemon + the simulator adapter.
+
+:class:`SchedulerClient` is a plain-socket JSON-lines client: requests
+are seq-tagged, replies matched by seq, and pushed events (``SETUP``/
+``RECONFIG``/``RELEASE``) encountered while waiting are buffered for
+:meth:`events`. One client = one connection; it is thread-safe for
+request/reply (a lock serializes calls) and reconnectable — daemon
+state is server-side, so a reconnected client resumes where it left
+off.
+
+:class:`RemotePolicy` adapts the client to the
+:class:`~repro.core.allocator.PlacementPolicy` surface, which is what
+rewires the discrete-event simulator as the service's first client:
+``Simulator(RemotePolicy(client), jobs)`` runs the identical FIFO
+discipline against the daemon-side allocator, and produces
+byte-identical schedules to the in-process path (the daemon applies
+the same deterministic ops in the same order — parity-tested and
+asserted in CI).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.allocator import Placement, PlacementPolicy
+from repro.core.geometry import JobShape
+
+from . import protocol
+
+
+class SchedulerClient:
+    """JSON-lines request/reply + event stream over one TCP socket."""
+
+    def __init__(self, address: Tuple[str, int], subscribe: bool = False,
+                 connect_timeout: float = 5.0):
+        self.address = (address[0], int(address[1]))
+        self._want_subscribe = subscribe
+        self._connect_timeout = connect_timeout
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._buf = bytearray()
+        self._events: List[Dict[str, Any]] = []
+        self._sock: Optional[socket.socket] = None
+        self.connect()
+
+    # -- connection ----------------------------------------------------
+    def connect(self) -> None:
+        """Dial (or re-dial) the daemon. Retries briefly so a client
+        racing the daemon's bind — or reconnecting across a daemon
+        restart — just works."""
+        self.close()
+        deadline = time.monotonic() + self._connect_timeout
+        last: Optional[Exception] = None
+        while time.monotonic() < deadline:
+            try:
+                self._sock = socket.create_connection(self.address,
+                                                      timeout=2.0)
+                self._sock.settimeout(None)
+                break
+            except OSError as e:
+                last = e
+                time.sleep(0.02)
+        else:
+            raise ConnectionError(
+                f"cannot reach scheduler at {self.address}: {last}")
+        self._buf = bytearray()
+        if self._want_subscribe:
+            self._call("subscribe")
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    # -- line transport ------------------------------------------------
+    def _readline(self, timeout: Optional[float]) -> Optional[bytes]:
+        """One protocol line, or None on timeout. Manual buffering so
+        socket timeouts never corrupt a buffered reader."""
+        assert self._sock is not None
+        while True:
+            nl = self._buf.find(b"\n")
+            if nl >= 0:
+                line = bytes(self._buf[:nl + 1])
+                del self._buf[:nl + 1]
+                return line
+            self._sock.settimeout(timeout)
+            try:
+                chunk = self._sock.recv(65536)
+            except socket.timeout:
+                return None
+            finally:
+                self._sock.settimeout(None)
+            if not chunk:
+                raise ConnectionError("scheduler closed the connection")
+            self._buf.extend(chunk)
+
+    def _call(self, op: str, **fields) -> Dict[str, Any]:
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+            msg = {"op": op, "seq": seq, **fields}
+            assert self._sock is not None, "client is closed"
+            self._sock.sendall(protocol.encode(msg))
+            while True:
+                line = self._readline(None)
+                assert line is not None
+                resp = protocol.decode(line)
+                if "event" in resp:
+                    self._events.append(resp)
+                    continue
+                if resp.get("seq") == seq:
+                    return resp
+                # Stale reply from a pre-reconnect request: drop it.
+
+    def call(self, op: str, **fields) -> Dict[str, Any]:
+        """Raw op; raises on protocol-level errors."""
+        resp = self._call(op, **fields)
+        if not resp.get("ok", False):
+            raise RuntimeError(f"scheduler {op} failed: "
+                               f"{resp.get('error', resp)}")
+        return resp
+
+    # -- service surface -----------------------------------------------
+    def submit(self, shape, job_id: Optional[int] = None) -> Dict[str, Any]:
+        dims = list(shape.dims) if hasattr(shape, "dims") else list(shape)
+        fields: Dict[str, Any] = {"shape": dims}
+        if job_id is not None:
+            fields["job_id"] = job_id
+        return self.call("submit", **fields)
+
+    def done(self, job_id: int) -> Dict[str, Any]:
+        return self.call("done", job_id=job_id)
+
+    def status(self) -> Dict[str, Any]:
+        return self.call("status")
+
+    def sync(self) -> Dict[str, Any]:
+        return self.call("sync")
+
+    def shutdown(self) -> Dict[str, Any]:
+        return self.call("shutdown")
+
+    def events(self, max_wait: float = 0.0) -> List[Dict[str, Any]]:
+        """Drain pushed events: everything buffered, plus whatever
+        arrives within ``max_wait`` seconds (0 = only what is already
+        here or in the socket buffer)."""
+        out, self._events = self._events, []
+        deadline = time.monotonic() + max_wait
+        with self._lock:
+            while True:
+                remaining = deadline - time.monotonic()
+                timeout = max(0.0, remaining) if max_wait else 0.0
+                try:
+                    line = self._readline(timeout or 0.000001)
+                except ConnectionError:
+                    break
+                if line is None:
+                    if remaining <= 0:
+                        break
+                    continue
+                resp = protocol.decode(line)
+                if "event" in resp:
+                    out.append(resp)
+        return out
+
+    # -- raw policy ops ------------------------------------------------
+    def try_place(self, job_id: int, shape) -> Dict[str, Any]:
+        dims = list(shape.dims) if hasattr(shape, "dims") else list(shape)
+        return self.call("try_place", job_id=job_id, shape=dims)
+
+    def release(self, job_id: int) -> Dict[str, Any]:
+        return self.call("release", job_id=job_id)
+
+    def can_ever_place(self, shape) -> bool:
+        dims = list(shape.dims) if hasattr(shape, "dims") else list(shape)
+        return bool(self.call("can_ever_place", shape=dims)["feasible"])
+
+
+class RemotePolicy(PlacementPolicy):
+    """The in-process policy surface, served remotely.
+
+    Plugs straight into :class:`repro.sim.simulator.Simulator` — the
+    simulator becomes a client of the daemon and cannot tell the
+    difference: ops arrive at the daemon in the simulator's own call
+    order, the daemon-side policy is deterministic in op order, and
+    placement metadata round-trips losslessly (tuples restored), so
+    schedules and metrics are byte-identical to in-process runs.
+    ``can_ever_place`` feasibility is cached per canonical shape by
+    the base class, exactly like an in-process policy — the daemon's
+    own cache makes the extra RPC cheap either way."""
+
+    def __init__(self, client: SchedulerClient):
+        super().__init__()
+        self.client = client
+        st = client.status()
+        self.name = st["policy"]
+        self._num_xpus = int(st["num_xpus"])
+
+    @property
+    def num_xpus(self) -> int:
+        return self._num_xpus
+
+    @property
+    def busy_xpus(self) -> int:
+        return int(self.client.status()["busy_xpus"])
+
+    def utilization(self) -> float:
+        st = self.client.status()
+        return int(st["busy_xpus"]) / int(st["num_xpus"])
+
+    def try_place(self, job_id: int, shape: JobShape) -> Optional[Placement]:
+        resp = self.client.try_place(job_id, shape)
+        if resp["outcome"] != protocol.PLACED:
+            return None
+        p = resp["placement"]
+        return Placement(
+            job_id=int(p["job_id"]),
+            shape=JobShape(tuple(int(v) for v in p["shape"])),
+            broken_rings=tuple(int(v) for v in p["broken_rings"]),
+            meta=protocol.detuple(p["meta"]))
+
+    def release(self, job_id: int) -> None:
+        self.client.release(job_id)
+
+    def _can_ever_place(self, shape: JobShape) -> bool:
+        return self.client.can_ever_place(shape)

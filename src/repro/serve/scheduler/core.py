@@ -1,0 +1,389 @@
+"""The allocator state machine behind the scheduler daemon.
+
+:class:`AllocatorCore` owns one placement policy and gives it service
+semantics: streaming submissions with FIFO queueing (head-of-line
+blocking, optionally backfill — the simulator's admission discipline,
+shared by construction), admission control under overload
+(``max_queue``), pushed topology events, and crash recovery.
+
+Persistence is **journal replay** over the fingerprinted checkpoint
+store from ``repro.eval.runner``: placement is a deterministic
+function of the op order (the same property that makes the fleet
+broker bit-exact), so the durable state is simply the ordered list of
+state-changing ops. :class:`SchedulerConfig` implements the
+``fingerprint()``/``checkpoint_name()`` duck-type the store keys on,
+which buys atomic tmp+rename writes, fingerprint-prefix sharding and
+``prune_checkpoints`` compatibility for free — and means a daemon
+restarted with a *different* config refuses to resume a stale journal
+(the fingerprint gates the load, exactly as eval resume does).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.allocator import make_policy
+from repro.core.engineconfig import EngineConfig
+from repro.core.events import TopologyEvent
+from repro.core.geometry import JobShape
+from repro.eval.runner import save_checkpoint, shard_dir
+
+from . import protocol
+
+
+@dataclass
+class SchedulerConfig:
+    """Everything that determines the daemon's behaviour (and hence
+    its checkpoint identity)."""
+
+    policy: str = "rfold"
+    policy_kw: Dict[str, Any] = field(default_factory=dict)
+    backfill: bool = False
+    # Admission: queue depth cap; None = queue without bound. A submit
+    # arriving at a full queue is REJECTED (stateless — not journaled).
+    max_queue: Optional[int] = None
+    engine: EngineConfig = field(default_factory=EngineConfig)
+    # Persistence: None disables checkpointing entirely.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 64       # journaled ops between snapshots
+    # Daemon bind address; port 0 = ephemeral (read it back after start).
+    host: str = "127.0.0.1"
+    port: int = 0
+
+    def __post_init__(self):
+        self.engine = EngineConfig.coerce(self.engine)
+
+    # -- checkpoint-store duck-type (repro.eval.runner) ----------------
+    def fingerprint(self) -> str:
+        """Hash of every field that affects placement outcomes. The
+        transport fields (host/port) and checkpoint cadence are
+        excluded: moving the daemon or retuning snapshot frequency
+        must not orphan its journal."""
+        fields = {"policy": self.policy, "policy_kw": self.policy_kw,
+                  "backfill": self.backfill, "max_queue": self.max_queue,
+                  "engine": asdict(self.engine)}
+        blob = json.dumps(fields, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def checkpoint_name(self) -> str:
+        return f"scheduler_{self.policy}__r0__{self.fingerprint()}.json"
+
+
+class AllocatorCore:
+    """Single-threaded allocator behind the daemon (the event loop
+    serializes ops, so no locking here). Every public op returns
+    ``(reply, events)``: the tagged reply for the requester and the
+    untagged event dicts to broadcast to subscribers."""
+
+    JOURNALED = ("submit", "done", "try_place", "release")
+
+    def __init__(self, config: SchedulerConfig, mask_client=None):
+        self.config = config
+        self.policy = make_policy(config.policy,
+                                  mask_client=mask_client,
+                                  engine=config.engine,
+                                  **config.policy_kw)
+        self.model = (getattr(self.policy, "torus", None)
+                      or getattr(self.policy, "cluster", None))
+        self.model.listeners.append(self._on_topology)
+        # FIFO queue of (job_id, shape-dims); mirrors the simulator's
+        # head-of-line blocking (backfill optional).
+        self.queue: List[Tuple[int, Tuple[int, int, int]]] = []
+        self.next_id = 0
+        # Durable state: the ordered journal of state-changing ops.
+        self.journal: List[Dict[str, Any]] = []
+        self._ops_since_sync = 0
+        self._replaying = False
+        self._pending_topo: List[TopologyEvent] = []
+        self.recovered_ops = 0
+
+    # -- topology listener --------------------------------------------
+    def _on_topology(self, ev: TopologyEvent) -> None:
+        if not self._replaying:
+            self._pending_topo.append(ev)
+
+    def _drain_topo(self) -> List[Dict[str, Any]]:
+        """Convert buffered TopologyEvents into wire event dicts.
+        A setup that changed OCS wiring pushes RECONFIG alongside
+        SETUP (clients that only care about their own placement read
+        SETUP; clients tracking the switch layer read RECONFIG)."""
+        out: List[Dict[str, Any]] = []
+        for ev in self._pending_topo:
+            if ev.kind == "setup":
+                out.append({"event": protocol.EV_SETUP,
+                            "job_id": ev.job_id, "detail": ev.detail})
+                if ev.reconfigured:
+                    out.append({"event": protocol.EV_RECONFIG,
+                                "job_id": ev.job_id,
+                                "topology": ev.topology,
+                                "detail": ev.detail})
+            else:
+                out.append({"event": protocol.EV_RELEASE,
+                            "job_id": ev.job_id,
+                            "reconfigured": ev.reconfigured,
+                            "detail": ev.detail})
+        self._pending_topo = []
+        return out
+
+    # -- journal / persistence ----------------------------------------
+    def _journal_op(self, op: Dict[str, Any]) -> None:
+        if self._replaying:
+            return
+        self.journal.append(op)
+        if not self.config.checkpoint_dir:
+            return
+        self._ops_since_sync += 1
+        if (self.config.checkpoint_every
+                and self._ops_since_sync >= self.config.checkpoint_every):
+            self.sync_checkpoint()
+
+    def sync_checkpoint(self) -> Optional[str]:
+        """Write the journal snapshot now (atomic tmp+rename via the
+        eval store). Returns the checkpoint path, or None when
+        persistence is off."""
+        cfg = self.config
+        if not cfg.checkpoint_dir:
+            return None
+        rec = {"fingerprint": cfg.fingerprint(), "format": 1,
+               "next_id": self.next_id, "journal": self.journal}
+        save_checkpoint(cfg.checkpoint_dir, cfg, rec)
+        self._ops_since_sync = 0
+        return os.path.join(shard_dir(cfg.checkpoint_dir,
+                                      cfg.fingerprint()),
+                            cfg.checkpoint_name())
+
+    @staticmethod
+    def load_state(config: SchedulerConfig) -> Optional[Dict[str, Any]]:
+        """The stored journal record for this config, or None (no
+        store, no file, or fingerprint mismatch — a changed config
+        must start fresh, never resume another config's journal)."""
+        if not config.checkpoint_dir:
+            return None
+        fp = config.fingerprint()
+        name = config.checkpoint_name()
+        for path in (os.path.join(shard_dir(config.checkpoint_dir, fp),
+                                  name),
+                     os.path.join(config.checkpoint_dir, name)):
+            if not os.path.exists(path):
+                continue
+            try:
+                with open(path) as f:
+                    rec = json.load(f)
+            except (OSError, ValueError):
+                continue
+            if rec.get("fingerprint") == fp:
+                return rec
+        return None
+
+    @classmethod
+    def recover(cls, config: SchedulerConfig,
+                mask_client=None) -> "AllocatorCore":
+        """Fresh core, or one rebuilt by replaying the stored journal.
+        Placement is deterministic in op order, so the replayed
+        occupancy grid, queue and in-flight set are byte-identical to
+        the pre-crash state (tested)."""
+        core = cls(config, mask_client=mask_client)
+        rec = cls.load_state(config)
+        if rec:
+            core._replay(rec)
+        return core
+
+    def _replay(self, rec: Dict[str, Any]) -> None:
+        self._replaying = True
+        try:
+            for op in rec["journal"]:
+                self.apply(dict(op))
+        finally:
+            self._replaying = False
+            self._pending_topo = []
+        self.journal = [dict(op) for op in rec["journal"]]
+        self.next_id = max(self.next_id, int(rec.get("next_id", 0)))
+        self.recovered_ops = len(self.journal)
+
+    # -- op dispatch ---------------------------------------------------
+    def apply(self, msg: Dict[str, Any]):
+        """Dispatch one request dict -> (reply, events). Unknown ops
+        and handler exceptions become error replies (the daemon must
+        survive malformed clients)."""
+        op = msg.get("op")
+        handler = getattr(self, f"op_{op}", None)
+        if handler is None:
+            return {"ok": False, "error": f"unknown op {op!r}"}, []
+        try:
+            return handler(msg)
+        except Exception as e:  # noqa: BLE001 — protocol boundary
+            self._pending_topo = []
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}, []
+
+    @staticmethod
+    def _shape(msg: Dict[str, Any]) -> JobShape:
+        dims = tuple(int(v) for v in msg["shape"])
+        if len(dims) != 3 or any(d <= 0 for d in dims):
+            raise ValueError(f"shape must be 3 positive extents, "
+                             f"got {dims}")
+        return JobShape(dims)
+
+    # -- service ops ---------------------------------------------------
+    def op_submit(self, msg: Dict[str, Any]):
+        """Streaming arrival: place now, queue FIFO, drop (shape can
+        never fit), or reject (queue full). Placement respects
+        head-of-line blocking: with a non-empty queue and no backfill,
+        a new arrival queues behind the blocked head even if it would
+        fit — identical to the simulator's discipline."""
+        shape = self._shape(msg)
+        job_id = msg.get("job_id")
+        if job_id is None:
+            job_id = self.next_id
+        job_id = int(job_id)
+        if any(j == job_id for j, _ in self.queue) \
+                or job_id in self.model.allocations:
+            return {"ok": False,
+                    "error": f"job {job_id} already known"}, []
+        if (self.config.max_queue is not None
+                and len(self.queue) >= self.config.max_queue):
+            # Stateless outcome: not journaled, no id consumed.
+            return {"ok": True, "outcome": protocol.REJECTED,
+                    "job_id": job_id, "queue_depth": len(self.queue)}, []
+        self.next_id = max(self.next_id, job_id + 1)
+        self._journal_op({"op": "submit", "job_id": job_id,
+                          "shape": list(shape.dims)})
+        if not self.policy.can_ever_place(shape):
+            return {"ok": True, "outcome": protocol.DROPPED,
+                    "job_id": job_id}, []
+        placement = None
+        if not self.queue or self.config.backfill:
+            placement = self.policy.try_place(job_id, shape)
+        if placement is None:
+            self.queue.append((job_id, shape.dims))
+            return {"ok": True, "outcome": protocol.QUEUED,
+                    "job_id": job_id,
+                    "queue_depth": len(self.queue)}, self._drain_topo()
+        return ({"ok": True, "outcome": protocol.PLACED,
+                 "job_id": job_id,
+                 "placement": self._placement_fields(placement)},
+                self._drain_topo())
+
+    def op_done(self, msg: Dict[str, Any]):
+        """A running job finished: release it, then drain the queue
+        (FIFO; newly started jobs are announced via pushed SETUP —
+        their owners subscribed for exactly this)."""
+        job_id = int(msg["job_id"])
+        queued = [j for j, _ in self.queue]
+        if job_id in self.model.allocations:
+            self._journal_op({"op": "done", "job_id": job_id})
+            self.policy.release(job_id)
+            started = self._drain_fifo()
+        elif job_id in queued:
+            # Cancelled while queued.
+            self._journal_op({"op": "done", "job_id": job_id})
+            self.queue = [(j, s) for j, s in self.queue if j != job_id]
+            started = []
+        else:
+            return {"ok": False, "error": f"job {job_id} not known"}, []
+        return ({"ok": True, "job_id": job_id,
+                 "started": started,
+                 "queue_depth": len(self.queue)}, self._drain_topo())
+
+    def _drain_fifo(self) -> List[Dict[str, Any]]:
+        """The simulator's ``_drain_queue`` discipline: FIFO with
+        head-of-line blocking; with backfill, later jobs may start
+        past a blocked head. Drops queued jobs whose shape can never
+        fit. Returns started/dropped notices (also pushed as events)."""
+        started: List[Dict[str, Any]] = []
+        i = 0
+        while i < len(self.queue):
+            job_id, dims = self.queue[i]
+            shape = JobShape(dims)
+            if not self.policy.can_ever_place(shape):
+                self.queue.pop(i)
+                started.append({"job_id": job_id,
+                                "outcome": protocol.DROPPED})
+                continue
+            placement = self.policy.try_place(job_id, shape)
+            if placement is None:
+                if not self.config.backfill:
+                    break
+                i += 1
+                continue
+            self.queue.pop(i)
+            started.append({"job_id": job_id,
+                            "outcome": protocol.PLACED,
+                            "placement":
+                                self._placement_fields(placement)})
+        return started
+
+    # -- raw policy ops (the simulator-as-client surface) -------------
+    def op_try_place(self, msg: Dict[str, Any]):
+        """Raw ``PlacementPolicy.try_place`` over the wire: no queue,
+        no admission — the simulator client drives its own FIFO and
+        needs exactly the in-process contract."""
+        shape = self._shape(msg)
+        job_id = int(msg["job_id"])
+        placement = self.policy.try_place(job_id, shape)
+        if placement is None:
+            return {"ok": True, "outcome": "full"}, []
+        self.next_id = max(self.next_id, job_id + 1)
+        self._journal_op({"op": "try_place", "job_id": job_id,
+                          "shape": list(shape.dims)})
+        return ({"ok": True, "outcome": protocol.PLACED,
+                 "placement": self._placement_fields(placement)},
+                self._drain_topo())
+
+    def op_release(self, msg: Dict[str, Any]):
+        job_id = int(msg["job_id"])
+        if job_id not in self.model.allocations:
+            return {"ok": False, "error": f"job {job_id} not allocated"}, []
+        self._journal_op({"op": "release", "job_id": job_id})
+        self.policy.release(job_id)
+        return {"ok": True, "job_id": job_id}, self._drain_topo()
+
+    def op_can_ever_place(self, msg: Dict[str, Any]):
+        shape = self._shape(msg)
+        return {"ok": True,
+                "feasible": bool(self.policy.can_ever_place(shape))}, []
+
+    # -- introspection -------------------------------------------------
+    def op_status(self, msg: Dict[str, Any]):
+        return {"ok": True, **self.status()}, []
+
+    def status(self) -> Dict[str, Any]:
+        return {
+            "policy": self.policy.name,
+            "num_xpus": int(self.policy.num_xpus),
+            "busy_xpus": int(self.policy.busy_xpus),
+            "utilization": float(self.policy.utilization()),
+            "allocated": len(self.model.allocations),
+            "queue_depth": len(self.queue),
+            "next_id": self.next_id,
+            "journal_ops": len(self.journal),
+            "state_digest": self.state_digest(),
+        }
+
+    def state_digest(self) -> str:
+        """Content hash of the full allocator state (occupancy bytes,
+        allocation ids, queue, id counter) — the byte-identity oracle
+        for the crash-recovery and parity tests."""
+        h = hashlib.sha256()
+        h.update(self.model.occ.tobytes())
+        dedicated = getattr(self.model, "dedicated", None)
+        if dedicated is not None:
+            h.update(dedicated.tobytes())
+        h.update(json.dumps(sorted(self.model.allocations)).encode())
+        h.update(json.dumps(self.queue).encode())
+        h.update(str(self.next_id).encode())
+        return h.hexdigest()[:16]
+
+    def op_sync(self, msg: Dict[str, Any]):
+        path = self.sync_checkpoint()
+        return {"ok": True, "path": path,
+                "journal_ops": len(self.journal)}, []
+
+    @staticmethod
+    def _placement_fields(placement) -> Dict[str, Any]:
+        return {"job_id": placement.job_id,
+                "shape": list(placement.shape.dims),
+                "broken_rings": list(placement.broken_rings),
+                "meta": placement.meta}

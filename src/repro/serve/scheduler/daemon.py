@@ -1,0 +1,143 @@
+"""Asyncio allocator daemon: the long-lived scheduling service.
+
+One :class:`AllocatorCore` behind an asyncio TCP server speaking the
+JSON-lines protocol (``protocol.py``). Connections are cheap
+line-loops; ops are applied on the event loop — the core is
+single-threaded by construction, so op order (the thing the journal
+persists) is exactly the order requests hit the loop.
+
+The daemon can share a fleet :class:`~repro.sim.fleet.QueryBroker` as
+its mask client: it registers itself like any simulator stepper, so
+its placement queries coalesce into the same batched engine calls as
+concurrently running simulations — serving and simulation share one
+engine.
+
+Crash semantics: :meth:`kill` drops the server and every connection
+without a final checkpoint (the crash the recovery tests simulate);
+graceful ``shutdown`` (op or :meth:`stop`) writes the journal first.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Optional, Set
+
+from . import protocol
+from .core import AllocatorCore, SchedulerConfig
+
+
+class SchedulerDaemon:
+    """Owns the core, the server socket and the subscriber set."""
+
+    def __init__(self, config: SchedulerConfig, mask_client=None,
+                 recover: bool = True):
+        self.config = config
+        self.mask_client = mask_client
+        self.core = (AllocatorCore.recover(config, mask_client)
+                     if recover else AllocatorCore(config, mask_client))
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._subscribers: Set[asyncio.StreamWriter] = set()
+        self._writers: Set[asyncio.StreamWriter] = set()
+        self._closing = asyncio.Event()
+        self._killed = False
+        self.address: Optional[tuple] = None
+
+    # -- lifecycle -----------------------------------------------------
+    async def start(self) -> tuple:
+        """Bind and serve; returns the (host, port) actually bound
+        (``port=0`` requests an ephemeral port)."""
+        self._server = await asyncio.start_server(
+            self._handle, self.config.host, self.config.port)
+        self.address = self._server.sockets[0].getsockname()[:2]
+        if self.mask_client is not None \
+                and hasattr(self.mask_client, "register"):
+            # The daemon is one more live client of the shared broker.
+            self.mask_client.register()
+        return self.address
+
+    async def wait_closed(self) -> None:
+        """Block until shutdown is requested, then tear down."""
+        await self._closing.wait()
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        for w in list(self._writers):
+            w.close()
+        if self.mask_client is not None \
+                and hasattr(self.mask_client, "deactivate"):
+            self.mask_client.deactivate()
+        if not self._killed:
+            self.core.sync_checkpoint()
+
+    def stop(self) -> None:
+        """Graceful stop (final checkpoint)."""
+        self._closing.set()
+
+    def kill(self) -> None:
+        """Simulated crash: stop serving with NO final checkpoint —
+        recovery must work from the last periodic snapshot alone."""
+        self._killed = True
+        self._closing.set()
+
+    # -- connection handling -------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self._writers.add(writer)
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    msg = protocol.decode(line)
+                except ValueError:
+                    writer.write(protocol.encode(
+                        {"ok": False, "error": "bad json"}))
+                    await writer.drain()
+                    continue
+                await self._dispatch(msg, writer)
+                if self._closing.is_set():
+                    break
+        except (ConnectionResetError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            self._writers.discard(writer)
+            self._subscribers.discard(writer)
+            writer.close()
+
+    async def _dispatch(self, msg: dict,
+                        writer: asyncio.StreamWriter) -> None:
+        op = msg.get("op")
+        if op == "subscribe":
+            self._subscribers.add(writer)
+            reply, events = {"ok": True, "subscribed": True}, []
+        elif op == "shutdown":
+            reply, events = {"ok": True, "shutdown": True}, []
+        else:
+            reply, events = self.core.apply(msg)
+        if "seq" in msg:
+            reply["seq"] = msg["seq"]
+        writer.write(protocol.encode(reply))
+        await writer.drain()
+        if events:
+            await self._broadcast(events)
+        if op == "shutdown":
+            self.stop()
+
+    async def _broadcast(self, events) -> None:
+        dead = []
+        # Snapshot: a connection may subscribe while we await a drain.
+        for sub in list(self._subscribers):
+            try:
+                for ev in events:
+                    sub.write(protocol.encode(ev))
+                await sub.drain()
+            except (ConnectionResetError, RuntimeError):
+                dead.append(sub)
+        for sub in dead:
+            self._subscribers.discard(sub)
+            self._writers.discard(sub)
+
+    # -- convenience ---------------------------------------------------
+    async def serve_forever(self) -> None:
+        await self.start()
+        await self.wait_closed()

@@ -1,0 +1,84 @@
+"""Wire protocol of the allocator service (JSON lines over TCP).
+
+One message per line, UTF-8 JSON. Two message classes share the
+stream:
+
+  * **Requests/replies** — a client tags each request with a
+    monotonically increasing ``seq``; the daemon's reply echoes it.
+    Replies always carry ``ok`` (bool) and, on failure, ``error``.
+  * **Pushed events** — untagged messages carrying an ``event`` key
+    (``SETUP``/``RECONFIG``/``RELEASE``), delivered to connections
+    that issued ``subscribe``. This mirrors the Configurator →
+    ``Job.send_setup``/``send_reconfig`` protocol of
+    models-on-the-move (SNIPPETS.md §1), with JSON lines instead of
+    ``SETUP-``-prefixed byte blobs.
+
+Request ops (``{"op": ..., "seq": n, ...fields}``):
+
+  ``submit``          shape=[a,b,c], optional job_id → outcome
+                      ``placed``/``queued``/``dropped``/``rejected``
+  ``done``            job_id — the job finished; frees its allocation
+                      and drains the queue
+  ``try_place``       job_id, shape — raw policy op (the simulator
+                      client path; no queueing/admission semantics)
+  ``release``         job_id — raw policy op
+  ``can_ever_place``  shape → feasible on an empty cluster?
+  ``status``          → policy/occupancy/queue snapshot + state digest
+  ``events``? no      (events are pushed, never polled)
+  ``subscribe``       register this connection for pushed events
+  ``sync``            force a checkpoint write now
+  ``shutdown``        graceful stop (final checkpoint, then close)
+
+Values are JSON-native: tuples become lists on the wire; the client
+converts shape-like fields back (`broken_rings`, meta tuples) where
+the in-process API promises tuples.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict
+
+import numpy as np
+
+# Submit outcomes.
+PLACED = "placed"        # allocation committed, SETUP pushed
+QUEUED = "queued"        # feasible but no capacity now: FIFO-queued
+DROPPED = "dropped"      # shape incompatible with the cluster (ever)
+REJECTED = "rejected"    # admission control: queue full (overload)
+
+# Pushed event names (models-on-the-move spelling).
+EV_SETUP = "SETUP"
+EV_RECONFIG = "RECONFIG"
+EV_RELEASE = "RELEASE"
+
+
+def _jsonable(obj: Any):
+    """numpy scalars leak out of occupancy math; flatten them."""
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"not JSON-serializable: {obj!r}")
+
+
+def encode(msg: Dict[str, Any]) -> bytes:
+    """One protocol line (terminated), ready for the socket."""
+    return (json.dumps(msg, default=_jsonable) + "\n").encode()
+
+
+def decode(line: bytes) -> Dict[str, Any]:
+    return json.loads(line)
+
+
+def detuple(obj):
+    """JSON turned every tuple into a list; restore tuples for the
+    shape-like values the in-process API returns as tuples (lists and
+    nested lists become tuples recursively — placement meta contains
+    only scalars, strings and shape tuples, so this is lossless)."""
+    if isinstance(obj, list):
+        return tuple(detuple(v) for v in obj)
+    if isinstance(obj, dict):
+        return {k: detuple(v) for k, v in obj.items()}
+    return obj

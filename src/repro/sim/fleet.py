@@ -516,15 +516,19 @@ class QueryBroker(MaskQueryClient):
 
 
 def install_mask_client(policy, client) -> None:
-    """Point a placement policy's cluster model at a mask client.
-    Policies expose their model as ``.torus`` (static) or ``.cluster``
-    (reconfigurable); both models implement ``set_mask_client``."""
+    """Deprecated: pass ``mask_client=`` to ``make_policy`` / the
+    policy constructor instead (constructor injection). Retained as a
+    delegating shim for callers holding an already-built policy."""
     model = getattr(policy, "torus", None) or getattr(policy, "cluster",
                                                       None)
     if model is None:
         raise TypeError(f"policy {policy!r} exposes no cluster model "
                         "to install a mask client on")
-    model.set_mask_client(client)
+    import warnings
+    warnings.warn("install_mask_client is deprecated; pass mask_client= "
+                  "to make_policy/the policy constructor",
+                  DeprecationWarning, stacklevel=2)
+    model._set_mask_client(client)
 
 
 class Fleet:
@@ -560,7 +564,18 @@ class Fleet:
 
     def __init__(self, engine=None, quorum="auto", timeout="auto",
                  max_inflight: Optional[int] = None):
+        from repro.core.engineconfig import EngineConfig
         from repro.kernels.fitmask import ops
+        if isinstance(engine, EngineConfig):
+            # One typed value carries both backend and flush policy;
+            # explicit kwargs (non-"auto") still win over its fields.
+            if quorum == "auto":
+                quorum = engine.quorum
+            if timeout == "auto":
+                timeout = engine.timeout
+            if max_inflight is None:
+                max_inflight = engine.max_inflight
+            engine = engine.resolve_name()
         eng = (engine if hasattr(engine, "multibox")
                else ops.get_engine(engine))
         host = bool(getattr(eng, "host_free", False))

@@ -1,0 +1,136 @@
+"""EngineConfig (the single engine-selection point) and the
+constructor-injection API: precedence order, deprecated env-var alias,
+deprecated post-hoc setters, and clone propagation."""
+import warnings
+
+import pytest
+
+from repro.core import engineconfig
+from repro.core.allocator import make_policy
+from repro.core.engineconfig import EngineConfig, set_default_engine
+from repro.core.maskquery import InlineMaskClient, resolve_mask_client
+from repro.core.reconfig import ReconfigTorus
+from repro.core.torus import StaticTorus
+from repro.kernels.fitmask import ops
+from repro.sim.fleet import install_mask_client
+
+
+@pytest.fixture(autouse=True)
+def _clean_selection(monkeypatch):
+    """Each test starts from pristine process-wide selection state."""
+    monkeypatch.delenv(engineconfig.ENGINE_ENV, raising=False)
+    monkeypatch.setattr(engineconfig, "_default_engine", None)
+    monkeypatch.setattr(engineconfig, "_env_warned", False)
+    yield
+
+
+# ------------------------------------------------------------- coerce
+def test_coerce_spellings():
+    assert EngineConfig.coerce(None) == EngineConfig()
+    assert EngineConfig.coerce("ref").engine == "ref"
+    cfg = EngineConfig(engine="numpy", fleet_size=4)
+    assert EngineConfig.coerce(cfg) is cfg
+    with pytest.raises(TypeError):
+        EngineConfig.coerce(42)
+
+
+# ---------------------------------------------------------- precedence
+def test_resolution_precedence(monkeypatch):
+    assert EngineConfig().resolve_name() == "numpy"  # baseline default
+    monkeypatch.setenv(engineconfig.ENGINE_ENV, "ref")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert EngineConfig().resolve_name() == "ref"     # env beats numpy
+        set_default_engine("numpy")
+        assert EngineConfig().resolve_name() == "numpy"   # programmatic beats env
+        assert EngineConfig(engine="ref").resolve_name() == "ref"  # explicit wins
+    set_default_engine(None)
+
+
+def test_alias_folding_and_unknown_names():
+    assert EngineConfig(engine="kernel").resolve_name() == "pallas"
+    with pytest.raises(KeyError):
+        EngineConfig(engine="bogus").resolve_name()
+
+
+def test_env_var_warns_deprecation_once(monkeypatch):
+    monkeypatch.setenv(engineconfig.ENGINE_ENV, "ref")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        EngineConfig().resolve_name()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second use: silent
+        assert EngineConfig().resolve_name() == "ref"
+
+
+def test_ops_entry_points_delegate_here(monkeypatch):
+    set_default_engine("ref")
+    assert ops.default_engine_name() == "ref"
+    ops.set_default_engine(None)
+    assert engineconfig._default_engine is None
+    assert ops.default_engine_name() == "numpy"
+
+
+def test_fleet_kwargs_and_with_engine():
+    cfg = EngineConfig(engine="numpy", quorum=0.5, timeout=0.01,
+                       max_inflight=3)
+    kw = cfg.fleet_kwargs()
+    assert kw == {"engine": "numpy", "quorum": 0.5, "timeout": 0.01,
+                  "max_inflight": 3}
+    assert "max_inflight" not in EngineConfig().fleet_kwargs()
+    assert cfg.with_engine("ref").engine == "ref"
+    assert cfg.with_engine("ref").quorum == 0.5
+
+
+def test_mask_client_resolution():
+    assert resolve_mask_client(None) is None            # numpy: host path
+    assert resolve_mask_client("numpy") is None
+    c = resolve_mask_client("ref")
+    assert isinstance(c, InlineMaskClient)
+    assert resolve_mask_client(EngineConfig(engine="ref")) is c  # interned
+
+
+# ------------------------------------------------- constructor injection
+def test_torus_constructor_injection():
+    client = InlineMaskClient("ref")
+    t = StaticTorus((4, 4, 4), engine="ref", mask_client=client)
+    assert t.engine_config.engine == "ref"
+    assert t.mask_client is client
+    r = ReconfigTorus(num_xpus=64, cube_n=4, engine=EngineConfig("ref"))
+    assert r.engine_config.engine == "ref"
+
+
+def test_fitmask_engine_kwarg_still_accepted():
+    t = StaticTorus((4, 4, 4), fitmask_engine="ref")
+    assert t.engine_config.engine == "ref"
+    assert t.fitmask_engine == "ref"  # legacy attribute mirrors it
+
+
+def test_set_mask_client_warns_and_delegates():
+    t = StaticTorus((4, 4, 4))
+    client = InlineMaskClient("ref")
+    with pytest.warns(DeprecationWarning, match="constructor"):
+        t.set_mask_client(client)
+    assert t.mask_client is client
+    r = ReconfigTorus(num_xpus=64, cube_n=4)
+    with pytest.warns(DeprecationWarning, match="constructor"):
+        r.set_mask_client(client)
+    assert r.mask_client is client
+
+
+def test_install_mask_client_warns_and_delegates():
+    pol = make_policy("rfold", num_xpus=64, cube_n=4)
+    client = InlineMaskClient("ref")
+    with pytest.warns(DeprecationWarning):
+        install_mask_client(pol, client)
+    assert pol.cluster.mask_client is client
+
+
+def test_policy_clones_inherit_engine_config():
+    pol = make_policy("rfold", num_xpus=64, cube_n=4,
+                      engine=EngineConfig(engine="ref", fleet_size=2))
+    clone = pol.empty_clone()
+    assert clone.cluster.engine_config == pol.cluster.engine_config
+    assert clone.cluster.mask_client is None  # probes never share clients
+
+    static = make_policy("folding", dims=(4, 4, 4), engine="ref")
+    assert static.empty_clone().torus.engine_config.engine == "ref"

@@ -1,0 +1,306 @@
+"""Allocator-as-a-service tests (repro.serve.scheduler + repro.api):
+protocol round-trips, pushed topology events, client reconnect,
+crash-recovery journal replay, admission control under overload,
+simulator-as-client byte-identical parity, and broker sharing between
+the daemon and in-process simulation."""
+import json
+
+import pytest
+
+from repro.api import (JobShape, Scheduler, SchedulerConfig, Simulator,
+                       TraceConfig, generate_trace, make_policy)
+from repro.serve.scheduler import (DROPPED, EV_RECONFIG, EV_RELEASE, EV_SETUP,
+                                   PLACED, QUEUED, REJECTED, AllocatorCore)
+from repro.sim.fleet import QueryBroker
+
+SMALL = dict(num_xpus=64, cube_n=4)      # one 4^3 cube: trivially full
+MEDIUM = dict(num_xpus=512, cube_n=4)    # 8 cubes
+
+
+def small_scheduler(**kw):
+    return Scheduler(SchedulerConfig(policy="rfold", policy_kw=SMALL, **kw))
+
+
+# ---------------------------------------------------------- round-trips
+def test_submit_place_done_roundtrip():
+    with small_scheduler() as s:
+        r = s.submit((4, 4, 4))
+        assert r["outcome"] == PLACED
+        assert r["placement"]["shape"] == [4, 4, 4]
+        st = s.status()
+        assert st["busy_xpus"] == 64 and st["allocated"] == 1
+        d = s.done(r["job_id"])
+        assert d["ok"] and d["started"] == []
+        assert s.status()["busy_xpus"] == 0
+
+
+def test_fifo_queue_and_drain_on_done():
+    with small_scheduler() as s:
+        first = s.submit((4, 4, 4))
+        second = s.submit((2, 2, 2))
+        assert first["outcome"] == PLACED
+        assert second["outcome"] == QUEUED  # head-of-line: cluster full
+        d = s.done(first["job_id"])
+        assert [x["job_id"] for x in d["started"]] == [second["job_id"]]
+        assert d["started"][0]["outcome"] == PLACED
+
+
+def test_infeasible_shape_dropped():
+    with small_scheduler() as s:
+        r = s.submit((100, 1, 1))  # 100 > 64 XPUs: never placeable
+        assert r["outcome"] == DROPPED
+        assert s.status()["queue_depth"] == 0
+
+
+def test_duplicate_and_unknown_ids_error():
+    with small_scheduler() as s:
+        r = s.submit((4, 4, 4), job_id=7)
+        assert r["outcome"] == PLACED
+        with pytest.raises(RuntimeError, match="already known"):
+            s.submit((2, 2, 2), job_id=7)
+        with pytest.raises(RuntimeError, match="not known"):
+            s.done(99)
+
+
+def test_cancel_while_queued():
+    with small_scheduler() as s:
+        s.submit((4, 4, 4))
+        q = s.submit((4, 4, 4))
+        assert q["outcome"] == QUEUED
+        d = s.done(q["job_id"])  # cancel the queued job
+        assert d["ok"] and s.status()["queue_depth"] == 0
+
+
+def test_bad_requests_keep_daemon_alive():
+    with small_scheduler() as s:
+        with pytest.raises(RuntimeError, match="unknown op"):
+            s.client.call("frobnicate")
+        with pytest.raises(RuntimeError, match="shape"):
+            s.client.call("submit", shape=[4, 4])
+        assert s.status()["ok"]  # daemon survived both
+
+
+# -------------------------------------------------------------- events
+def test_setup_reconfig_release_events():
+    with Scheduler(SchedulerConfig(policy="rfold",
+                                   policy_kw=MEDIUM)) as s:
+        # 128 XPUs across 2 chained cubes: reconfiguration guaranteed.
+        r = s.submit((8, 4, 4))
+        assert r["outcome"] == PLACED
+        s.done(r["job_id"])
+        names = [e["event"] for e in s.events(max_wait=2.0)]
+        assert names == [EV_SETUP, EV_RECONFIG, EV_RELEASE]
+
+
+def test_single_cube_job_emits_no_reconfig():
+    with small_scheduler() as s:
+        r = s.submit((2, 2, 2))
+        s.done(r["job_id"])
+        evs = s.events(max_wait=2.0)
+        assert [e["event"] for e in evs] == [EV_SETUP, EV_RELEASE]
+        assert evs[1]["reconfigured"] is False
+
+
+def test_events_carry_placement_detail():
+    with small_scheduler() as s:
+        s.submit((4, 4, 4))
+        ev = s.events(max_wait=2.0)[0]
+        assert ev["event"] == EV_SETUP
+        assert "fold" in ev["detail"]
+        assert ev["detail"]["cubes"] == [0]  # which cubes got wired up
+
+
+def test_unsubscribed_client_gets_no_events():
+    with small_scheduler() as s:
+        other = s.new_client(subscribe=False)
+        s.submit((2, 2, 2))
+        assert s.events(max_wait=1.0)  # the subscribed handle sees them
+        assert other.events(max_wait=0.2) == []
+        other.close()
+
+
+# ----------------------------------------------------------- reconnect
+def test_client_reconnect_resumes_session():
+    with small_scheduler() as s:
+        r = s.submit((4, 4, 4))
+        c = s.new_client()
+        assert c.status()["allocated"] == 1
+        c.close()
+        c.connect()  # daemon state is server-side: nothing lost
+        assert c.status()["allocated"] == 1
+        c.done(r["job_id"])
+        assert c.status()["allocated"] == 0
+        c.close()
+
+
+# ----------------------------------------------------------- admission
+def test_admission_rejects_when_queue_full():
+    with small_scheduler(max_queue=2) as s:
+        assert s.submit((4, 4, 4))["outcome"] == PLACED
+        assert s.submit((4, 4, 4))["outcome"] == QUEUED
+        assert s.submit((4, 4, 4))["outcome"] == QUEUED
+        r = s.submit((4, 4, 4))
+        assert r["outcome"] == REJECTED
+        # Rejection is stateless: no id consumed, no journal entry.
+        st = s.status()
+        assert st["queue_depth"] == 2 and st["journal_ops"] == 3
+
+
+def test_rejected_submits_not_replayed(tmp_path):
+    cfg = SchedulerConfig(policy="rfold", policy_kw=SMALL, max_queue=1,
+                          checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    with Scheduler(cfg) as s:
+        s.submit((4, 4, 4))
+        s.submit((4, 4, 4))
+        assert s.submit((4, 4, 4))["outcome"] == REJECTED
+        digest = s.status()["state_digest"]
+    s2 = Scheduler(cfg).start()
+    try:
+        st = s2.status()
+        assert st["state_digest"] == digest and st["journal_ops"] == 2
+    finally:
+        s2.stop()
+
+
+# ------------------------------------------------------ crash recovery
+def test_crash_recovery_byte_identical(tmp_path):
+    cfg = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                          checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    s = Scheduler(cfg).start()
+    ids = [s.submit((4, 4, 4))["job_id"] for _ in range(6)]
+    s.done(ids[2])
+    digest, ops = (s.status()[k] for k in ("state_digest", "journal_ops"))
+    s.kill()  # crash: no final checkpoint written
+
+    s2 = Scheduler(cfg).start()
+    try:
+        st = s2.status()
+        assert st["state_digest"] == digest
+        assert st["journal_ops"] == ops
+        assert s2._daemon.core.recovered_ops == ops
+        # And the recovered daemon keeps allocating with fresh ids.
+        r = s2.submit((4, 4, 4))
+        assert r["outcome"] == PLACED and r["job_id"] not in ids
+    finally:
+        s2.stop()
+
+
+def test_graceful_stop_checkpoints_without_cadence(tmp_path):
+    """checkpoint_every=0 disables periodic snapshots; the final
+    checkpoint on graceful shutdown still persists everything."""
+    cfg = SchedulerConfig(policy="rfold", policy_kw=SMALL,
+                          checkpoint_dir=str(tmp_path), checkpoint_every=0)
+    with Scheduler(cfg) as s:
+        s.submit((4, 4, 4))
+        digest = s.status()["state_digest"]
+    core = AllocatorCore.recover(cfg)
+    assert core.state_digest() == digest and core.recovered_ops == 1
+
+
+def test_changed_config_refuses_stale_journal(tmp_path):
+    cfg = SchedulerConfig(policy="rfold", policy_kw=SMALL,
+                          checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    with Scheduler(cfg) as s:
+        s.submit((4, 4, 4))
+    other = SchedulerConfig(policy="rfold", policy_kw=SMALL, backfill=True,
+                            checkpoint_dir=str(tmp_path))
+    assert cfg.fingerprint() != other.fingerprint()
+    core = AllocatorCore.recover(other)
+    assert core.recovered_ops == 0 and not core.journal
+
+
+def test_fingerprint_ignores_transport_fields(tmp_path):
+    a = SchedulerConfig(policy="rfold", port=1234, checkpoint_every=8)
+    b = SchedulerConfig(policy="rfold", port=5678, checkpoint_every=99,
+                        host="0.0.0.0")
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_midtrace_restart_matches_uninterrupted_run(tmp_path):
+    """Daemon killed mid-trace; the recovered daemon finishes the op
+    stream and lands on the same final state as one that never died."""
+    ops = ([("submit", (4, 4, 4))] * 5 + [("done", 1)]
+           + [("submit", (2, 2, 2))] * 3 + [("done", 3), ("done", 0)])
+
+    def play(sched, stream):
+        ids = {}
+        for i, (kind, arg) in enumerate(stream):
+            if kind == "submit":
+                ids[i] = sched.submit(arg)["job_id"]
+            else:
+                sched.done(arg)
+
+    cfg = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                          checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    s = Scheduler(cfg).start()
+    play(s, ops[:6])
+    s.kill()
+    s = Scheduler(cfg).start()
+    play(s, ops[6:])
+    interrupted = s.status()["state_digest"]
+    s.stop()
+
+    with Scheduler(SchedulerConfig(policy="rfold",
+                                   policy_kw=MEDIUM)) as ref:
+        play(ref, ops)
+        assert ref.status()["state_digest"] == interrupted
+
+
+# ------------------------------------------- simulator-as-client parity
+def _job_record(jobs):
+    return json.dumps(
+        [[j.job_id, j.start, j.finish, j.dropped, j.slowdown,
+          j.placement_meta] for j in jobs],
+        sort_keys=True, default=list)
+
+
+@pytest.mark.parametrize("policy,kw", [
+    ("firstfit", dict(dims=(8, 8, 8))),
+    ("folding", dict(dims=(8, 8, 8))),
+    ("reconfig", MEDIUM),
+    ("rfold", MEDIUM),
+    ("rfold_be", MEDIUM),
+])
+def test_simulator_as_client_byte_identical(policy, kw):
+    trace_cfg = TraceConfig(num_jobs=40, cluster_xpus=512, size_max=512,
+                            seed=3)
+    local = Simulator(make_policy(policy, **kw),
+                      generate_trace(trace_cfg)).run()
+    with Scheduler(SchedulerConfig(policy=policy, policy_kw=kw)) as s:
+        remote = Simulator(s.remote_policy(),
+                           generate_trace(trace_cfg)).run()
+    assert _job_record(remote.jobs) == _job_record(local.jobs)
+
+
+def test_remote_policy_contract():
+    with small_scheduler() as s:
+        pol = s.remote_policy()
+        assert pol.name == "rfold" and pol.num_xpus == 64
+        assert pol.can_ever_place(JobShape((4, 4, 4)))
+        assert not pol.can_ever_place(JobShape((100, 1, 1)))
+        p = pol.try_place(0, JobShape((2, 2, 2)))
+        assert p.job_id == 0 and p.shape.dims == (2, 2, 2)
+        assert isinstance(p.broken_rings, tuple)
+        assert pol.try_place(1, JobShape((4, 4, 4))) is None  # full now
+        assert pol.utilization() == pytest.approx(8 / 64)
+        pol.release(0)
+        assert pol.busy_xpus == 0
+
+
+# ------------------------------------------------------- broker sharing
+def test_daemon_shares_query_broker():
+    """The daemon registers as one more broker client: its placement
+    queries ride the same batched engine path as fleet simulation, and
+    results match the unshared daemon bit-for-bit."""
+    broker = QueryBroker("numpy", quorum=0)  # drain mode: solo-safe
+    with Scheduler(SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                                   engine="numpy"),
+                   mask_client=broker) as shared, \
+            Scheduler(SchedulerConfig(policy="rfold",
+                                      policy_kw=MEDIUM)) as plain:
+        for sched in (shared, plain):
+            for dims in [(8, 4, 4), (2, 2, 2), (16, 1, 1)]:
+                sched.submit(dims)
+        assert (shared.status()["state_digest"]
+                == plain.status()["state_digest"])
+    assert broker.stats.requests > 0  # daemon queries really brokered
