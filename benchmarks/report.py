@@ -249,6 +249,34 @@ def service_table(path: str = "BENCH_service.json") -> str:
     return "\n".join(lines)
 
 
+def chaos_table(path: str = "BENCH_chaos.json") -> str:
+    """Scenario x policy degradation/recovery matrix from the chaos
+    bench (dip depth, recovered utilization, victim dispositions)."""
+    with open(path) as f:
+        bench = json.load(f)
+    lines = ["| scenario | policy | jcr | util | dip | recovered util | "
+             "preempted | migrated | deterministic |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for scenario in sorted(bench.get("scenarios", {})):
+        for pol, cell in bench["scenarios"][scenario].items():
+            ch = cell["chaos"]
+            lines.append(
+                f"| {scenario} | {cell.get('label', pol)} | "
+                f"{cell['summary']['jcr']:.3f} | "
+                f"{ch['util_overall']:.3f} | {ch['dip_depth']:.3f} | "
+                f"{ch['recovered_util']:.3f} | {ch['preempted']} | "
+                f"{ch['migrated']} | {cell['deterministic']} |")
+    head = bench.get("headline", {})
+    if head:
+        lines.append(
+            f"\nHeadline ({head.get('criterion')}): rfold util "
+            f"{head.get('rfold_util')} vs static best "
+            f"{head.get('static_best_util')}, recovered="
+            f"{head.get('rfold_recovered')}, deterministic="
+            f"{head.get('deterministic')} -> pass={head.get('pass')}")
+    return "\n".join(lines)
+
+
 def bench_table(alloc_path: str = "BENCH_allocator.json",
                 eval_path: str = "BENCH_paper_eval.json") -> str:
     """Perf trajectory: placement-engine rates (BENCH_allocator.json)
@@ -291,7 +319,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
                     choices=["all", "dryrun", "roofline", "paper", "bench",
-                             "fitmask", "reconfig", "fleet", "service"])
+                             "fitmask", "reconfig", "fleet", "service",
+                             "chaos"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -323,6 +352,10 @@ def main() -> None:
             os.path.exists("BENCH_service.json"):
         print("\n### Allocator service (BENCH_service.json)\n")
         print(service_table())
+    if args.which in ("all", "chaos") and \
+            os.path.exists("BENCH_chaos.json"):
+        print("\n### Chaos layer (BENCH_chaos.json)\n")
+        print(chaos_table())
 
 
 if __name__ == "__main__":

@@ -27,12 +27,13 @@ def main() -> None:
     ap.add_argument("--skip-reconfig", action="store_true")
     ap.add_argument("--skip-fleet", action="store_true")
     ap.add_argument("--skip-service", action="store_true")
+    ap.add_argument("--skip-chaos", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
-    from benchmarks import (allocator_bench, fitmask_bench, fleet_bench,
-                            kernels_bench, paper_eval, reconfig_bench,
-                            roofline, service_bench)
+    from benchmarks import (allocator_bench, chaos_bench, fitmask_bench,
+                            fleet_bench, kernels_bench, paper_eval,
+                            reconfig_bench, roofline, service_bench)
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -92,6 +93,18 @@ def main() -> None:
         else:
             service_bench.main(["--quick", "--out",
                                 "experiments/BENCH_service_quick.json"])
+
+    if not args.skip_chaos:
+        print("=" * 70)
+        print("## Chaos benchmark (scenario x policy degradation matrix)")
+        # Snapshot policy as the other benches: the tracked
+        # BENCH_chaos.json is the full 120-job matrix; CI-sized runs
+        # smoke the quick variant into experiments/.
+        if args.full:
+            chaos_bench.main(["--out", "BENCH_chaos.json"])
+        else:
+            chaos_bench.main(["--quick", "--out",
+                              "experiments/BENCH_chaos_quick.json"])
 
     if not args.skip_fitmask:
         print("=" * 70)

@@ -40,6 +40,10 @@ from repro.sim.job import Job
 from repro.sim.metrics import summarize, utilization_cdf
 from repro.sim.simulator import SimResult, Simulator
 from repro.traces.generator import TraceConfig, generate_trace, generate_traces
+# Chaos layer: fault injection, degraded-fabric scenarios.
+from repro.sim.faults import (ChaosObserver, FaultConfig, FaultEvent,
+                              FaultGenerator, FaultInjector)
+from repro.sim.scenarios import SCENARIOS, Scenario, run_scenario
 # Paper-scale evaluation.
 from repro.eval import (PAPER_FIG3_RATIOS, PAPER_FIG4_DELTAS, PAPER_TABLE1,
                         EvalRunner, EvalTask, aggregate_by_label, fig3, fig4,
@@ -60,6 +64,9 @@ __all__ = [
     # simulation
     "Simulator", "SimResult", "Job", "summarize", "utilization_cdf",
     "TraceConfig", "generate_trace", "generate_traces",
+    # chaos layer
+    "FaultConfig", "FaultEvent", "FaultGenerator", "FaultInjector",
+    "ChaosObserver", "Scenario", "SCENARIOS", "run_scenario",
     # evaluation
     "EvalRunner", "EvalTask", "make_tasks", "aggregate_by_label",
     "table1", "fig3", "fig4",

@@ -18,7 +18,9 @@ from __future__ import annotations
 from .client import RemotePolicy, SchedulerClient
 from .core import AllocatorCore, SchedulerConfig
 from .daemon import SchedulerDaemon
-from .protocol import DROPPED, EV_RECONFIG, EV_RELEASE, EV_SETUP, PLACED, QUEUED, REJECTED
+from .protocol import (DROPPED, EV_FAULT, EV_MIGRATE, EV_PREEMPT,
+                       EV_RECONFIG, EV_RELEASE, EV_REPAIR, EV_SETUP,
+                       MIGRATED, PLACED, PREEMPTED, QUEUED, REJECTED)
 from .service import Scheduler
 
 __all__ = [
@@ -32,7 +34,13 @@ __all__ = [
     "QUEUED",
     "DROPPED",
     "REJECTED",
+    "PREEMPTED",
+    "MIGRATED",
     "EV_SETUP",
     "EV_RECONFIG",
     "EV_RELEASE",
+    "EV_FAULT",
+    "EV_REPAIR",
+    "EV_PREEMPT",
+    "EV_MIGRATE",
 ]

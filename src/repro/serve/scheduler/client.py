@@ -136,6 +136,24 @@ class SchedulerClient:
     def done(self, job_id: int) -> Dict[str, Any]:
         return self.call("done", job_id=job_id)
 
+    def preempt(self, job_id: int) -> Dict[str, Any]:
+        """Evict a running job back to the queue head."""
+        return self.call("preempt", job_id=job_id)
+
+    def migrate(self, job_id: int) -> Dict[str, Any]:
+        """Evict + replan a running job; ``outcome`` is ``migrated``
+        (with the new placement) or ``preempted`` (queued at head)."""
+        return self.call("migrate", job_id=job_id)
+
+    def fault(self, kind: str, targets) -> Dict[str, Any]:
+        """Inject a fabric fault (kind = node|link|ocs_port); the
+        reply lists each victim's disposition."""
+        return self.call("fault", kind=kind, targets=list(targets))
+
+    def repair(self, kind: str, targets) -> Dict[str, Any]:
+        """Undo a fault; no-op for targets that never failed."""
+        return self.call("repair", kind=kind, targets=list(targets))
+
     def status(self) -> Dict[str, Any]:
         return self.call("status")
 

@@ -30,6 +30,7 @@ from repro.core.engineconfig import EngineConfig
 from repro.core.events import TopologyEvent
 from repro.core.geometry import JobShape
 from repro.eval.runner import save_checkpoint, shard_dir
+from repro.sim.faults import FaultEvent, FaultInjector
 
 from . import protocol
 
@@ -78,7 +79,8 @@ class AllocatorCore:
     ``(reply, events)``: the tagged reply for the requester and the
     untagged event dicts to broadcast to subscribers."""
 
-    JOURNALED = ("submit", "done", "try_place", "release")
+    JOURNALED = ("submit", "done", "try_place", "release",
+                 "preempt", "migrate", "fault", "repair")
 
     def __init__(self, config: SchedulerConfig, mask_client=None):
         self.config = config
@@ -92,6 +94,11 @@ class AllocatorCore:
         # FIFO queue of (job_id, shape-dims); mirrors the simulator's
         # head-of-line blocking (backfill optional).
         self.queue: List[Tuple[int, Tuple[int, int, int]]] = []
+        # Shapes of *allocated* jobs — what preempt/migrate/fault
+        # replanning re-places. Rebuilt by journal replay like every
+        # other piece of state.
+        self.shapes: Dict[int, Tuple[int, int, int]] = {}
+        self._injector: Optional[FaultInjector] = None
         self.next_id = 0
         # Durable state: the ordered journal of state-changing ops.
         self.journal: List[Dict[str, Any]] = []
@@ -120,6 +127,12 @@ class AllocatorCore:
                                 "job_id": ev.job_id,
                                 "topology": ev.topology,
                                 "detail": ev.detail})
+            elif ev.kind in ("fault", "repair"):
+                out.append({"event": (protocol.EV_FAULT
+                                      if ev.kind == "fault"
+                                      else protocol.EV_REPAIR),
+                            "topology": ev.topology,
+                            "detail": ev.detail})
             else:
                 out.append({"event": protocol.EV_RELEASE,
                             "job_id": ev.job_id,
@@ -261,6 +274,7 @@ class AllocatorCore:
             return {"ok": True, "outcome": protocol.QUEUED,
                     "job_id": job_id,
                     "queue_depth": len(self.queue)}, self._drain_topo()
+        self.shapes[job_id] = shape.dims
         return ({"ok": True, "outcome": protocol.PLACED,
                  "job_id": job_id,
                  "placement": self._placement_fields(placement)},
@@ -275,6 +289,7 @@ class AllocatorCore:
         if job_id in self.model.allocations:
             self._journal_op({"op": "done", "job_id": job_id})
             self.policy.release(job_id)
+            self.shapes.pop(job_id, None)
             started = self._drain_fifo()
         elif job_id in queued:
             # Cancelled while queued.
@@ -309,6 +324,7 @@ class AllocatorCore:
                 i += 1
                 continue
             self.queue.pop(i)
+            self.shapes[job_id] = dims
             started.append({"job_id": job_id,
                             "outcome": protocol.PLACED,
                             "placement":
@@ -328,6 +344,7 @@ class AllocatorCore:
         self.next_id = max(self.next_id, job_id + 1)
         self._journal_op({"op": "try_place", "job_id": job_id,
                           "shape": list(shape.dims)})
+        self.shapes[job_id] = shape.dims
         return ({"ok": True, "outcome": protocol.PLACED,
                  "placement": self._placement_fields(placement)},
                 self._drain_topo())
@@ -338,7 +355,126 @@ class AllocatorCore:
             return {"ok": False, "error": f"job {job_id} not allocated"}, []
         self._journal_op({"op": "release", "job_id": job_id})
         self.policy.release(job_id)
+        self.shapes.pop(job_id, None)
         return {"ok": True, "job_id": job_id}, self._drain_topo()
+
+    # -- chaos ops (preemption, migration, fault injection) ------------
+    def op_preempt(self, msg: Dict[str, Any]):
+        """Evict a running job back to the *head* of the queue (it was
+        already admitted — FIFO order is by first admission). Work is
+        assumed checkpointed; the service tracks placement, not
+        progress. The freed hole is deliberately NOT drained: the
+        preempted head itself would immediately re-place into it."""
+        job_id = int(msg["job_id"])
+        if job_id not in self.model.allocations:
+            return {"ok": False, "error": f"job {job_id} not allocated"}, []
+        self._journal_op({"op": "preempt", "job_id": job_id})
+        dims = self.shapes.pop(job_id)
+        self.policy.release(job_id)
+        self.queue.insert(0, (job_id, dims))
+        events = self._drain_topo()
+        events.append({"event": protocol.EV_PREEMPT, "job_id": job_id,
+                       "shape": list(dims)})
+        return ({"ok": True, "job_id": job_id,
+                 "outcome": protocol.PREEMPTED,
+                 "queue_depth": len(self.queue)}, events)
+
+    def op_migrate(self, msg: Dict[str, Any]):
+        """Evict + replan through the allocator *now*: the job lands in
+        a fresh placement (``migrated``) or, if the cluster cannot fit
+        it at the moment (degraded fabric), falls back to the queue
+        head (``preempted``). Deterministic in op order, so the journal
+        records only the intent."""
+        job_id = int(msg["job_id"])
+        if job_id not in self.model.allocations:
+            return {"ok": False, "error": f"job {job_id} not allocated"}, []
+        self._journal_op({"op": "migrate", "job_id": job_id})
+        dims = self.shapes[job_id]
+        self.policy.release(job_id)
+        placement = self.policy.try_place(job_id, JobShape(dims))
+        if placement is None:
+            self.shapes.pop(job_id, None)
+            self.queue.insert(0, (job_id, dims))
+            events = self._drain_topo()
+            events.append({"event": protocol.EV_PREEMPT,
+                           "job_id": job_id, "shape": list(dims)})
+            return ({"ok": True, "job_id": job_id,
+                     "outcome": protocol.PREEMPTED,
+                     "queue_depth": len(self.queue)}, events)
+        events = self._drain_topo()
+        events.append({"event": protocol.EV_MIGRATE, "job_id": job_id,
+                       "shape": list(dims)})
+        return ({"ok": True, "job_id": job_id,
+                 "outcome": protocol.MIGRATED,
+                 "placement": self._placement_fields(placement)}, events)
+
+    def _fault_injector(self) -> FaultInjector:
+        if self._injector is None:
+            self._injector = FaultInjector(self.policy)
+        return self._injector
+
+    @staticmethod
+    def _fault_event(msg: Dict[str, Any], action: str) -> FaultEvent:
+        return FaultEvent.from_wire({"time": 0.0, "action": action,
+                                     "kind": msg["kind"],
+                                     "targets": msg.get("targets", [])})
+
+    def op_fault(self, msg: Dict[str, Any]):
+        """Inject a fabric fault (``kind`` = node|link|ocs_port,
+        ``targets`` as in :class:`repro.sim.faults.FaultEvent`).
+        Victims are evicted *before* the model transitions (the models
+        refuse otherwise), then replanned in job-id order: re-placed
+        now → ``migrated``; no capacity → ``preempted`` at the queue
+        head. Journaled as intent — replay recomputes victims and
+        replans deterministically."""
+        ev = self._fault_event(msg, "fault")
+        inj = self._fault_injector()
+        victims = [j for j in inj.victims(ev)
+                   if j in self.model.allocations]
+        self._journal_op({"op": "fault", "kind": ev.kind,
+                          "targets": list(ev.targets)})
+        evicted: List[Tuple[int, Tuple[int, int, int]]] = []
+        for jid in victims:
+            dims = self.shapes.pop(jid)
+            self.policy.release(jid)
+            evicted.append((jid, dims))
+        applied = inj.apply(ev)
+        events = self._drain_topo()
+        dispositions: List[Dict[str, Any]] = []
+        requeue: List[Tuple[int, Tuple[int, int, int]]] = []
+        for jid, dims in evicted:
+            placement = self.policy.try_place(jid, JobShape(dims))
+            if placement is not None:
+                self.shapes[jid] = dims
+                dispositions.append(
+                    {"job_id": jid, "outcome": protocol.MIGRATED,
+                     "placement": self._placement_fields(placement)})
+                events.append({"event": protocol.EV_MIGRATE,
+                               "job_id": jid, "shape": list(dims)})
+            else:
+                requeue.append((jid, dims))
+                dispositions.append({"job_id": jid,
+                                     "outcome": protocol.PREEMPTED})
+                events.append({"event": protocol.EV_PREEMPT,
+                               "job_id": jid, "shape": list(dims)})
+        self.queue[0:0] = requeue
+        events.extend(self._drain_topo())
+        return ({"ok": True, "kind": ev.kind,
+                 "applied": list(applied), "victims": dispositions,
+                 "queue_depth": len(self.queue)}, events)
+
+    def op_repair(self, msg: Dict[str, Any]):
+        """Undo a fault (no-op for targets that never failed) and
+        drain the queue — capacity came back."""
+        ev = self._fault_event(msg, "repair")
+        inj = self._fault_injector()
+        self._journal_op({"op": "repair", "kind": ev.kind,
+                          "targets": list(ev.targets)})
+        applied = inj.apply(ev)
+        started = self._drain_fifo()
+        return ({"ok": True, "kind": ev.kind, "applied": list(applied),
+                 "started": started,
+                 "queue_depth": len(self.queue)}, self._drain_topo())
 
     def op_can_ever_place(self, msg: Dict[str, Any]):
         shape = self._shape(msg)
@@ -364,14 +500,25 @@ class AllocatorCore:
 
     def state_digest(self) -> str:
         """Content hash of the full allocator state (occupancy bytes,
-        allocation ids, queue, id counter) — the byte-identity oracle
-        for the crash-recovery and parity tests."""
+        fault masks, allocation ids + shapes, queue, id counter) — the
+        byte-identity oracle for the crash-recovery and parity tests."""
         h = hashlib.sha256()
         h.update(self.model.occ.tobytes())
         dedicated = getattr(self.model, "dedicated", None)
         if dedicated is not None:
             h.update(dedicated.tobytes())
+        # Chaos state: failed nodes, dead OCS ports, cut links — a
+        # faulted cluster must never digest-match a healthy one.
+        h.update(self.model.failed.tobytes())
+        ocs_ok = getattr(self.model, "ocs_ok", None)
+        if ocs_ok is not None:
+            h.update(ocs_ok.tobytes())
+        cut = getattr(self.model, "cut_links", None)
+        if cut is not None:
+            h.update(json.dumps(sorted(cut)).encode())
         h.update(json.dumps(sorted(self.model.allocations)).encode())
+        h.update(json.dumps(sorted(
+            (j, list(d)) for j, d in self.shapes.items())).encode())
         h.update(json.dumps(self.queue).encode())
         h.update(str(self.next_id).encode())
         return h.hexdigest()[:16]

@@ -23,6 +23,16 @@ Request ops (``{"op": ..., "seq": n, ...fields}``):
                       client path; no queueing/admission semantics)
   ``release``         job_id — raw policy op
   ``can_ever_place``  shape → feasible on an empty cluster?
+  ``preempt``         job_id — evict a running job back to the queue
+                      head (checkpoint-resume assumed) → ``preempted``
+  ``migrate``         job_id — evict + replan through the allocator
+                      now → ``migrated`` (new placement) or
+                      ``preempted`` (no capacity: queued at the head)
+  ``fault``           kind=node|link|ocs_port, targets — inject a
+                      fabric fault; victims are evicted first, then
+                      replanned (each → ``migrated``/``preempted``)
+  ``repair``          kind, targets — undo a fault (no-op for targets
+                      that never failed) and drain the queue
   ``status``          → policy/occupancy/queue snapshot + state digest
   ``events``? no      (events are pushed, never polled)
   ``subscribe``       register this connection for pushed events
@@ -45,11 +55,19 @@ PLACED = "placed"        # allocation committed, SETUP pushed
 QUEUED = "queued"        # feasible but no capacity now: FIFO-queued
 DROPPED = "dropped"      # shape incompatible with the cluster (ever)
 REJECTED = "rejected"    # admission control: queue full (overload)
+# Eviction outcomes (preempt/migrate/fault victims).
+PREEMPTED = "preempted"  # evicted, re-queued at the head
+MIGRATED = "migrated"    # evicted and re-placed immediately
 
 # Pushed event names (models-on-the-move spelling).
 EV_SETUP = "SETUP"
 EV_RECONFIG = "RECONFIG"
 EV_RELEASE = "RELEASE"
+# Chaos-layer events: fabric transitions and victim dispositions.
+EV_FAULT = "FAULT"
+EV_REPAIR = "REPAIR"
+EV_PREEMPT = "PREEMPT"
+EV_MIGRATE = "MIGRATE"
 
 
 def _jsonable(obj: Any):

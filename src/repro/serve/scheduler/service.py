@@ -136,6 +136,18 @@ class Scheduler:
     def done(self, job_id: int) -> Dict[str, Any]:
         return self.client.done(job_id)
 
+    def preempt(self, job_id: int) -> Dict[str, Any]:
+        return self.client.preempt(job_id)
+
+    def migrate(self, job_id: int) -> Dict[str, Any]:
+        return self.client.migrate(job_id)
+
+    def fault(self, kind: str, targets) -> Dict[str, Any]:
+        return self.client.fault(kind, targets)
+
+    def repair(self, kind: str, targets) -> Dict[str, Any]:
+        return self.client.repair(kind, targets)
+
     def events(self, max_wait: float = 0.0) -> List[Dict[str, Any]]:
         return self.client.events(max_wait=max_wait)
 

@@ -14,12 +14,21 @@ class Job:
     duration: float           # ideal contention-free runtime (seconds)
     shape: JobShape
 
+    # Multi-tenant priority (chaos layer): larger = more important;
+    # only consulted when the simulator runs with priority preemption.
+    priority: int = 0
+
     # -- filled by the simulator --
     start: Optional[float] = None
     finish: Optional[float] = None
     dropped: bool = False
     slowdown: float = 1.0
     placement_meta: dict = field(default_factory=dict)
+    # -- chaos bookkeeping (fault injection / preemption) --
+    preemptions: int = 0      # evicted and re-queued
+    migrations: int = 0       # evicted and immediately re-placed
+    killed: bool = False      # evicted with no feasible home (dropped)
+    remaining: Optional[float] = None  # ideal work left after eviction
 
     @property
     def size(self) -> int:

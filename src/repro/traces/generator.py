@@ -41,6 +41,20 @@ class TraceConfig:
     # duration ~ lognormal (Philly-like): median 13 min, sigma 1.4
     duration_median_s: float = 780.0
     duration_sigma: float = 1.4
+    # Size-duration correlation (trace-calibration step 3's open
+    # question: big jobs run longer in the real Philly trace, the
+    # independent samplers ignore it). Sampled through a Gaussian
+    # copula, so both marginals are exactly preserved and ``corr = 0``
+    # keeps the legacy independent draws byte-identical.
+    size_duration_corr: float = 0.0
+    # Bursty arrivals: 0 keeps pure Poisson (legacy, byte-identical);
+    # > 0 draws inter-arrivals from a two-phase hyperexponential with
+    # the same mean (offered load unchanged) but CV > 1 — arrivals
+    # clump, stressing queue depth and recovery.
+    arrival_burstiness: float = 0.0
+    # Multi-tenant priorities: > 1 assigns each job a uniform priority
+    # in [0, levels); 1 keeps every job at priority 0 (legacy).
+    priority_levels: int = 1
     small_threshold: int = 256
     p_1d_small: float = 0.5           # small: 1D vs 2D
     p_2d_large: float = 0.5           # large: 2D or 3D
@@ -88,13 +102,40 @@ TRACE_PRESETS = {
 }
 
 
-def _truncated_exp_sizes(rng: np.random.Generator, n: int, scale: float,
-                         hi: int) -> np.ndarray:
-    """Inverse-CDF sampling of Exp(scale) truncated to [1, hi]."""
-    u = rng.uniform(size=n)
+def _trunc_exp_icdf(u: np.ndarray, scale: float, hi: int) -> np.ndarray:
+    """Inverse CDF of Exp(scale) truncated to [1, hi] at quantiles
+    ``u`` (the shared kernel of the independent and copula samplers)."""
     fmax = 1.0 - math.exp(-hi / scale)
     x = -scale * np.log(1.0 - u * fmax)
     return np.clip(np.ceil(x), 1, hi).astype(np.int64)
+
+
+def _truncated_exp_sizes(rng: np.random.Generator, n: int, scale: float,
+                         hi: int) -> np.ndarray:
+    """Inverse-CDF sampling of Exp(scale) truncated to [1, hi]."""
+    return _trunc_exp_icdf(rng.uniform(size=n), scale, hi)
+
+
+def _std_normal_cdf(z: np.ndarray) -> np.ndarray:
+    """Φ(z) via math.erf (no scipy in the container)."""
+    return np.array([0.5 * (1.0 + math.erf(v / math.sqrt(2.0)))
+                     for v in np.asarray(z, dtype=np.float64)])
+
+
+def _correlated_size_duration(rng: np.random.Generator, cfg: "TraceConfig",
+                              mu: float):
+    """Gaussian-copula joint draw: sizes keep the truncated-exponential
+    marginal (via Φ(z₁) pushed through the inverse CDF), durations keep
+    the lognormal marginal (exp(μ + σ·z₂)), and corr(z₁, z₂) = ρ sets
+    the rank correlation — the Philly-like "big jobs run longer"."""
+    rho = float(np.clip(cfg.size_duration_corr, -0.999, 0.999))
+    z = rng.standard_normal(size=(cfg.num_jobs, 2))
+    z1 = z[:, 0]
+    z2 = rho * z1 + math.sqrt(1.0 - rho * rho) * z[:, 1]
+    sizes = _trunc_exp_icdf(_std_normal_cdf(z1), cfg.size_scale,
+                            cfg.size_max)
+    durations = np.exp(mu + cfg.duration_sigma * z2)
+    return sizes, durations
 
 
 def _cube_grid_size(dims, n: int) -> int:
@@ -146,25 +187,49 @@ def sample_shape(rng: np.random.Generator, size: int,
 
 def generate_trace(cfg: TraceConfig) -> List[Job]:
     rng = np.random.default_rng(cfg.seed)
-    sizes = _truncated_exp_sizes(rng, cfg.num_jobs, cfg.size_scale,
-                                 cfg.size_max)
+    mu = math.log(cfg.duration_median_s)
+    # Every non-default knob below branches so the default draw
+    # sequence — and therefore every legacy trace — stays
+    # byte-identical (asserted in tests/test_trace_calibration.py).
+    if cfg.size_duration_corr != 0.0:
+        sizes, durations = _correlated_size_duration(rng, cfg, mu)
+    else:
+        sizes = _truncated_exp_sizes(rng, cfg.num_jobs, cfg.size_scale,
+                                     cfg.size_max)
+        durations = None
     if cfg.round_even:
         sizes = np.where(sizes > 1, (sizes + 1) // 2 * 2, sizes)
-    mu = math.log(cfg.duration_median_s)
-    durations = rng.lognormal(mean=mu, sigma=cfg.duration_sigma,
-                              size=cfg.num_jobs)
+    if durations is None:
+        durations = rng.lognormal(mean=mu, sigma=cfg.duration_sigma,
+                                  size=cfg.num_jobs)
     if cfg.mean_interarrival is not None:
         mean_ia = cfg.mean_interarrival
     else:
         # offered load = rate * E[size * duration] / cluster_xpus
         demand = float(np.mean(sizes * durations))
         mean_ia = demand / (cfg.target_load * cfg.cluster_xpus)
-    arrivals = np.cumsum(rng.exponential(mean_ia, size=cfg.num_jobs))
+    if cfg.arrival_burstiness > 0.0:
+        # Two-phase hyperexponential, mean preserved exactly:
+        # 0.75·(1-b) + 0.25·(1+3b) = 1.
+        b = float(min(cfg.arrival_burstiness, 0.95))
+        fast = rng.uniform(size=cfg.num_jobs) < 0.75
+        phase_mean = np.where(fast, (1.0 - b) * mean_ia,
+                              (1.0 + 3.0 * b) * mean_ia)
+        gaps = rng.exponential(1.0, size=cfg.num_jobs) * phase_mean
+    else:
+        gaps = rng.exponential(mean_ia, size=cfg.num_jobs)
+    arrivals = np.cumsum(gaps)
+    if cfg.priority_levels > 1:
+        priorities = rng.integers(cfg.priority_levels,
+                                  size=cfg.num_jobs)
+    else:
+        priorities = np.zeros(cfg.num_jobs, dtype=np.int64)
     jobs = []
     for i in range(cfg.num_jobs):
         shape = sample_shape(rng, int(sizes[i]), cfg)
         jobs.append(Job(job_id=i, arrival=float(arrivals[i]),
-                        duration=float(durations[i]), shape=shape))
+                        duration=float(durations[i]), shape=shape,
+                        priority=int(priorities[i])))
     return jobs
 
 

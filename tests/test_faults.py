@@ -1,0 +1,412 @@
+"""Chaos-layer tests: fault models, injection, generation, simulator
+eviction semantics.
+
+The load-bearing guarantees:
+
+* A fault on resources hosting a job always evicts the victim first —
+  the models *refuse* (``FaultConflictError``) to fail owned
+  resources, so silent corruption is structurally impossible.
+* Repairing a never-failed resource is a no-op.
+* :class:`FaultEvent` round-trips the JSON-lines wire format.
+* A seeded :class:`FaultGenerator` is reproducible (hypothesis sweep).
+* Batched and naive reconfig plan search agree under OCS degradation.
+* The full chaos simulation is deterministic, and attaching an
+  observer never changes the schedule.
+"""
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import make_policy
+from repro.core.geometry import JobShape
+from repro.core.reconfig import ReconfigTorus
+from repro.core.torus import FAILED, FaultConflictError, StaticTorus
+from repro.sim.faults import (ChaosObserver, FaultConfig, FaultEvent,
+                              FaultGenerator, FaultInjector)
+from repro.sim.simulator import Simulator
+from repro.traces.generator import TraceConfig, generate_trace
+
+SMALL = dict(num_xpus=64, cube_n=4)
+MEDIUM = dict(num_xpus=512, cube_n=4)
+TRACE_512 = dict(cluster_xpus=512, size_max=512)
+
+
+# ---------------------------------------------------- static torus model
+def test_static_fail_marks_occupied_and_unplaceable():
+    t = StaticTorus((4, 4, 4))
+    applied = t.fail_nodes([(0, 0, 0), (1, 1, 1)])
+    assert applied == [(0, 0, 0), (1, 1, 1)]
+    assert t.occ[0, 0, 0] and t.owner[0, 0, 0] == FAILED
+    assert t.num_failed == 2
+    # busy_xpus excludes failed nodes; free_xpus shrinks by them.
+    assert t.busy_xpus == 0 and t.free_xpus == 64 - 2
+    t.check_invariants()
+    # repairing restores everything
+    assert t.repair_nodes([(0, 0, 0), (1, 1, 1)]) == [(0, 0, 0), (1, 1, 1)]
+    assert t.num_failed == 0 and t.free_xpus == 64
+    t.check_invariants()
+
+
+def test_static_fail_owned_node_refused():
+    pol = make_policy("firstfit", dims=(4, 4, 4))
+    p = pol.try_place(0, JobShape((4, 4, 4)))
+    assert p is not None
+    with pytest.raises(FaultConflictError):
+        pol.torus.fail_nodes([(0, 0, 0)])
+    pol.torus.check_invariants()  # the refused fault changed nothing
+    # after eviction the same fault applies cleanly
+    pol.release(0)
+    assert pol.torus.fail_nodes([(0, 0, 0)]) == [(0, 0, 0)]
+
+
+def test_static_repair_of_never_failed_node_is_noop():
+    t = StaticTorus((4, 4, 4))
+    assert t.repair_nodes([(2, 2, 2)]) == []
+    assert t.num_failed == 0
+    t.check_invariants()
+
+
+def test_static_fail_is_idempotent():
+    t = StaticTorus((4, 4, 4))
+    t.fail_nodes([(0, 0, 0)])
+    assert t.fail_nodes([(0, 0, 0)]) == []  # second fault: no-op
+    assert t.num_failed == 1
+
+
+def test_cut_link_blocks_commit_and_repair_restores():
+    t = StaticTorus((4, 4, 4))
+    assert t.cut_link((0, 0, 0), (0, 0, 1))
+    assert not t.cut_link((0, 0, 0), (0, 0, 1))  # already cut
+    coords = [(0, 0, z) for z in range(4)]
+    links = [((0, 0, z), (0, 0, (z + 1) % 4)) for z in range(4)]
+    with pytest.raises(ValueError, match="cut"):
+        t.commit(1, coords, links)
+    assert t.repair_link((0, 0, 0), (0, 0, 1))
+    t.commit(1, coords, links)  # repairable after repair
+    t.check_invariants()
+
+
+def test_cut_link_under_job_refused():
+    pol = make_policy("firstfit", dims=(4, 4, 4))
+    pol.try_place(0, JobShape((4, 4, 4)))
+    alloc = pol.torus.allocations[0]
+    u, v = next(iter(sorted(alloc.links)))
+    with pytest.raises(FaultConflictError):
+        pol.torus.cut_link(u, v)
+
+
+def test_cut_link_routes_fold_around_as_broken_axis():
+    """A fold whose ring would traverse a cut link still places, but
+    with that axis counted broken (the 17 % slowdown path) instead of
+    silently using the dead wire."""
+    pol = make_policy("folding", dims=(4, 4, 4))
+    healthy = pol.try_place(0, JobShape((4, 4, 4)))
+    assert healthy.broken_rings == ()
+    pol.release(0)
+    pol.torus.cut_link((0, 0, 0), (0, 0, 1))
+    degraded = pol.try_place(1, JobShape((4, 4, 4)))
+    assert degraded is not None
+    assert 2 in degraded.broken_rings  # the cut z-axis ring is broken
+    pol.torus.check_invariants()
+
+
+# -------------------------------------------------- reconfig torus model
+def test_reconfig_fail_cells_and_repair():
+    pol = make_policy("rfold", **SMALL)
+    m = pol.cluster
+    applied = m.fail_cells([(0, 0, 0, 0), (0, 1, 1, 1)])
+    assert applied == [(0, 0, 0, 0), (0, 1, 1, 1)]
+    assert m.busy_xpus == 0 and m.free_xpus == 64 - 2
+    m.check_invariants()
+    # whole-cube job no longer fits; smaller still does
+    assert pol.try_place(0, JobShape((4, 4, 4))) is None
+    assert pol.try_place(1, JobShape((2, 2, 2))) is not None
+    pol.release(1)
+    assert m.repair_cells([(0, 0, 0, 0), (0, 1, 1, 1)]) == applied
+    assert pol.try_place(2, JobShape((4, 4, 4))) is not None
+    m.check_invariants()
+
+
+def test_reconfig_fail_owned_cell_refused():
+    pol = make_policy("rfold", **SMALL)
+    pol.try_place(0, JobShape((4, 4, 4)))
+    with pytest.raises(FaultConflictError):
+        pol.cluster.fail_cells([(0, 0, 0, 0)])
+    pol.cluster.check_invariants()
+
+
+def test_reconfig_repair_never_failed_noop():
+    pol = make_policy("rfold", **SMALL)
+    assert pol.cluster.repair_cells([(0, 3, 3, 3)]) == []
+    pol.cluster.check_invariants()
+
+
+def _cubes_of(model, job_id):
+    return sorted({piece.cube_id for piece in model.allocations[job_id]})
+
+
+def test_ocs_port_fault_excludes_cube_from_chains():
+    """With a dead OCS port, the cube can still host OCS-free local
+    jobs but never participates in multi-cube chains."""
+    pol = make_policy("rfold", **MEDIUM)
+    m = pol.cluster
+    assert m.fail_ocs_port([0]) == [0]
+    # A 2-cube job must avoid cube 0 (8 cubes, 7 usable).
+    p = pol.try_place(0, JobShape((8, 4, 4)))
+    assert p is not None and p.meta["num_cubes"] >= 2
+    assert 0 not in _cubes_of(m, 0)
+    # Full-cube jobs also avoid cube 0: their wrap closure rides the
+    # OCS loopback (ocs_links=48), which the dead port can't provide.
+    for jid in range(1, 6):  # job 0 holds 2 cubes; 5 of 8 remain usable
+        q = pol.try_place(jid, JobShape((4, 4, 4)))
+        assert q is not None and 0 not in _cubes_of(m, jid)
+    assert pol.try_place(8, JobShape((4, 4, 4))) is None
+    # OCS-free local placement in cube 0 still works.
+    q = pol.try_place(9, JobShape((2, 2, 2)))
+    assert q is not None and _cubes_of(m, 9) == [0]
+    assert q.meta["ocs_links"] == 0
+    m.check_invariants()
+
+
+def test_ocs_port_fault_with_chained_job_refused():
+    pol = make_policy("rfold", **MEDIUM)
+    p = pol.try_place(0, JobShape((8, 4, 4)))  # spans >= 2 cubes via OCS
+    assert p is not None and p.meta["ocs_links"] > 0
+    cube = _cubes_of(pol.cluster, 0)[0]
+    with pytest.raises(FaultConflictError):
+        pol.cluster.fail_ocs_port([cube])
+    assert pol.cluster.jobs_using_ocs([cube]) == [0]
+    pol.cluster.check_invariants()
+
+
+def test_ocs_repair_never_failed_noop():
+    pol = make_policy("rfold", **MEDIUM)
+    assert pol.cluster.repair_ocs_port([3]) == []
+
+
+def test_ocs_degraded_batched_matches_naive():
+    """Plan search under OCS degradation: the batched engine and the
+    naive oracle must pick identical plans (same candidate filtering
+    for wrap closures and multi-cube chains)."""
+    from repro.core.folding import enumerate_folds
+    rt = ReconfigTorus(512, 4)
+    rt.fail_ocs_port([0, 3])
+    rt.fail_cells([(1, 0, 0, 0), (1, 1, 0, 0)])
+    jid = 0
+    for dims in [(8, 4, 4), (4, 4, 4), (2, 2, 4), (8, 8, 4), (4, 4, 8),
+                 (2, 4, 2), (16, 4, 4)]:
+        for f in enumerate_folds(JobShape(dims), max_dim=rt.max_extent):
+            plan = rt.place_fold(f)
+            assert plan == rt.place_fold_naive(f), (dims, f)
+            if plan is not None:
+                rt.commit(jid, plan)
+                jid += 1
+                break
+    rt.check_invariants()
+
+
+# ------------------------------------------------------- FaultEvent wire
+def test_fault_event_wire_roundtrip():
+    for ev in [
+        FaultEvent(1.5, "fault", "node", ((0, 1, 2), (3, 0, 1))),
+        FaultEvent(2.0, "repair", "node", ((2, 1, 2, 3),)),
+        FaultEvent(0.25, "fault", "link", (((0, 0, 0), (0, 0, 1)),)),
+        FaultEvent(9.0, "fault", "ocs_port", (5,)),
+    ]:
+        wire = json.loads(json.dumps(ev.to_wire()))  # through JSON bytes
+        back = FaultEvent.from_wire(wire)
+        assert back == ev
+
+
+# ----------------------------------------------------- FaultGenerator
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 5), st.integers(0, 3),
+       st.integers(1, 8))
+def test_generator_reproducible_and_well_formed(seed, node_faults,
+                                                fabric_faults, blast):
+    cfg = FaultConfig(seed=seed, num_node_faults=node_faults,
+                      num_fabric_faults=fabric_faults,
+                      nodes_per_fault=blast)
+    model = make_policy("rfold", **SMALL).cluster
+    a = FaultGenerator(cfg).generate(model, horizon=100.0)
+    b = FaultGenerator(cfg).generate(model, horizon=100.0)
+    assert a == b  # same seed, same timeline
+    assert len([e for e in a if e.action == "fault"]) == cfg.total_events
+    assert all(a[i].time <= a[i + 1].time for i in range(len(a) - 1))
+    for ev in a:
+        assert ev.kind in ("node", "link", "ocs_port")
+        if ev.kind == "node":
+            assert len(ev.targets) == min(blast, 64)
+            assert all(len(t) == 4 for t in ev.targets)  # reconfig cells
+    # every fault has a matching repair (repair=True default)
+    faults = [e for e in a if e.action == "fault"]
+    repairs = [e for e in a if e.action == "repair"]
+    assert sorted((f.targets for f in faults), key=repr) == \
+        sorted((r.targets for r in repairs), key=repr)
+
+
+def test_generator_static_vs_reconfig_target_concretization():
+    cfg = FaultConfig(seed=7, num_node_faults=2, nodes_per_fault=3)
+    static = FaultGenerator(cfg).generate(
+        make_policy("firstfit", dims=(8, 8, 8)).torus, horizon=50.0)
+    reconf = FaultGenerator(cfg).generate(
+        make_policy("rfold", **MEDIUM).cluster, horizon=50.0)
+    # same flat draws, concretized per model: 3-coords vs 4-cells
+    assert all(len(t) == 3 for e in static for t in e.targets)
+    assert all(len(t) == 4 for e in reconf for t in e.targets)
+    assert [e.time for e in static] == [e.time for e in reconf]
+
+
+# ------------------------------------------------- simulator + injector
+def _chaos_sim(policy="rfold", policy_kw=MEDIUM, num_jobs=50, seed=0,
+               fault_cfg=None, observer=None, **sim_kw):
+    jobs = generate_trace(TraceConfig(num_jobs=num_jobs, seed=seed,
+                                      **TRACE_512))
+    pol = make_policy(policy, **policy_kw)
+    model = getattr(pol, "cluster", None) or pol.torus
+    horizon = max(j.arrival for j in jobs)
+    faults = FaultGenerator(
+        fault_cfg or FaultConfig(seed=seed, num_node_faults=4,
+                                 nodes_per_fault=8)
+    ).generate(model, horizon)
+    return Simulator(pol, jobs, faults=faults, observer=observer,
+                     **sim_kw), faults
+
+
+def test_fault_on_hosting_node_preempts_or_migrates_never_corrupts():
+    obs = ChaosObserver()
+    sim, faults = _chaos_sim(observer=obs)
+    result = sim.run()
+    model = getattr(sim.policy, "cluster", None) or sim.policy.torus
+    model.check_invariants()
+    # every victim was preempted or migrated — accounted, never lost
+    assert obs.victims == obs.preempted + obs.migrated
+    assert obs.killed == 0
+    for j in result.jobs:
+        assert (j.preemptions + j.migrations == 0) or j.scheduled
+        # evicted work was preserved: jobs never finish before the
+        # remaining-work replan says they can
+        if j.finish is not None and j.migrations + j.preemptions == 0:
+            assert j.finish == pytest.approx(
+                j.start + j.duration * j.slowdown)
+
+
+def test_fault_mode_kill_fail_stops_victims():
+    obs = ChaosObserver()
+    sim, _ = _chaos_sim(observer=obs, fault_mode="kill",
+                        fault_cfg=FaultConfig(seed=1, num_node_faults=6,
+                                              nodes_per_fault=16))
+    result = sim.run()
+    assert obs.victims == obs.killed
+    assert obs.preempted == obs.migrated == 0
+    killed = [j for j in result.jobs if j.killed]
+    assert len(killed) == obs.killed
+    assert all(j.dropped and j.finish is None for j in killed)
+
+
+def test_chaos_simulation_deterministic():
+    recs = []
+    for _ in range(2):
+        obs = ChaosObserver()
+        sim, _ = _chaos_sim(observer=obs)
+        result = sim.run()
+        recs.append(json.dumps(
+            {"chaos": result.chaos,
+             "jobs": [[j.job_id, j.start, j.finish, j.preemptions,
+                       j.migrations, j.dropped] for j in result.jobs]},
+            sort_keys=True))
+    assert recs[0] == recs[1]
+
+
+def test_observer_is_pure_observation():
+    """Attaching an observer must not change the schedule."""
+    sim_a, _ = _chaos_sim(observer=None)
+    sim_b, _ = _chaos_sim(observer=ChaosObserver())
+    ra, rb = sim_a.run(), sim_b.run()
+    assert [(j.job_id, j.start, j.finish) for j in ra.jobs] == \
+        [(j.job_id, j.start, j.finish) for j in rb.jobs]
+    assert ra.chaos is None and rb.chaos is not None
+
+
+def test_no_faults_byte_identical_to_legacy_simulator():
+    """The chaos plumbing is pay-for-play: a Simulator with no faults,
+    no observer and no priorities produces the identical schedule the
+    pre-chaos simulator did."""
+    jobs_a = generate_trace(TraceConfig(num_jobs=60, seed=3, **TRACE_512))
+    jobs_b = generate_trace(TraceConfig(num_jobs=60, seed=3, **TRACE_512))
+    legacy = Simulator(make_policy("rfold", **MEDIUM), jobs_a).run()
+    chaosy = Simulator(make_policy("rfold", **MEDIUM), jobs_b,
+                       faults=(), observer=None).run()
+    assert json.dumps([[j.job_id, j.start, j.finish, j.dropped,
+                        j.slowdown] for j in legacy.jobs]) == \
+        json.dumps([[j.job_id, j.start, j.finish, j.dropped,
+                     j.slowdown] for j in chaosy.jobs])
+    assert legacy.utilization_samples == chaosy.utilization_samples
+
+
+def test_injector_victims_and_apply_dispatch():
+    pol = make_policy("rfold", **SMALL)
+    pol.try_place(0, JobShape((4, 4, 4)))
+    inj = FaultInjector(pol)
+    ev = FaultEvent(0.0, "fault", "node", ((0, 0, 0, 0),))
+    assert inj.victims(ev) == [0]
+    pol.release(0)
+    assert inj.victims(ev) == []
+    assert inj.apply(ev) == [(0, 0, 0, 0)]
+    repair = FaultEvent(1.0, "repair", "node", ((0, 0, 0, 0),))
+    assert inj.victims(repair) == []  # repairs never evict
+    assert inj.apply(repair) == [(0, 0, 0, 0)]
+    pol.cluster.check_invariants()
+
+
+def test_observer_finalize_degradation_metrics():
+    obs = ChaosObserver()
+    sim, faults = _chaos_sim(observer=obs, num_jobs=80)
+    result = sim.run()
+    ch = result.chaos
+    n_faults = sum(1 for f in faults if f.action == "fault")
+    assert ch["faults"] == n_faults and ch["repairs"] == n_faults
+    assert 0.0 <= ch["util_overall"] <= 1.0
+    assert ch["dip_depth"] >= 0.0
+    assert ch["max_queue_depth"] >= ch["requeue_depth_max"] >= 0
+    if ch["recovered"]:
+        assert ch["time_to_recover"] is not None
+
+
+# ------------------------------------------------- priority preemption
+def test_priority_preemption_evicts_lower_priority():
+    pol = make_policy("rfold", **SMALL)
+    from repro.sim.job import Job
+    jobs = [Job(job_id=0, arrival=0.0, duration=100.0,
+                shape=JobShape((4, 4, 4)), priority=0),
+            Job(job_id=1, arrival=1.0, duration=10.0,
+                shape=JobShape((4, 4, 4)), priority=2)]
+    obs = ChaosObserver()
+    result = Simulator(pol, jobs, observer=obs,
+                       priority_preemption=True).run()
+    j0, j1 = result.jobs
+    assert j1.start == 1.0          # high priority preempts its way in
+    assert j0.preemptions == 1
+    assert j0.finish > j1.finish    # evicted job resumed after
+    # work-preserving: j0 ran 1s before eviction, 99s remain
+    assert j0.finish == pytest.approx(j1.finish + 99.0)
+    assert obs.preempted == 1
+
+
+def test_priority_preemption_never_evicts_equal_or_higher():
+    pol = make_policy("rfold", **SMALL)
+    from repro.sim.job import Job
+    jobs = [Job(job_id=0, arrival=0.0, duration=100.0,
+                shape=JobShape((4, 4, 4)), priority=1),
+            Job(job_id=1, arrival=1.0, duration=10.0,
+                shape=JobShape((4, 4, 4)), priority=1)]
+    result = Simulator(pol, jobs, priority_preemption=True).run()
+    j0, j1 = result.jobs
+    assert j0.preemptions == 0
+    assert j1.start == pytest.approx(j0.finish)  # plain FIFO wait
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,135 @@
+"""Named chaos scenarios: the five-entry catalog behind the CI
+scenario-matrix wall.
+
+Guarantees under test: every scenario record is byte-deterministic
+across identically-seeded runs, each scenario actually exercises what
+its name promises (node_churn evicts, multi_tenant preempts by
+priority, bursty raises arrival CV, ocs_degraded cuts fabric), and the
+degradation metrics in the record are internally consistent.
+"""
+import json
+import math
+
+import pytest
+
+from repro.api import SCENARIOS, Scenario, run_scenario
+from repro.traces.generator import TraceConfig, generate_trace
+
+
+def _record(name, **kw):
+    return run_scenario(SCENARIOS[name], num_jobs=60, seed=0, **kw)
+
+
+def test_catalog_has_the_five_named_scenarios():
+    assert sorted(SCENARIOS) == ["bursty", "healthy", "multi_tenant",
+                                 "node_churn", "ocs_degraded"]
+    for name, sc in SCENARIOS.items():
+        assert isinstance(sc, Scenario) and sc.name == name
+        assert sc.description  # every entry documents itself
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_records_byte_deterministic(name):
+    a = json.dumps(_record(name), sort_keys=True)
+    b = json.dumps(_record(name), sort_keys=True)
+    assert a == b
+
+
+def test_healthy_scenario_has_no_faults():
+    rec = _record("healthy")
+    assert rec["num_faults"] == 0
+    ch = rec["chaos"]
+    assert ch["faults"] == ch["victims"] == ch["preempted"] == 0
+    assert ch["dip_depth"] == 0.0
+
+
+def test_node_churn_evicts_and_accounts_every_victim():
+    rec = _record("node_churn")
+    assert rec["num_faults"] > 0
+    ch = rec["chaos"]
+    assert ch["faults"] > 0 and ch["repairs"] == ch["faults"]
+    # victims are conserved: preempted + migrated, never dropped
+    assert ch["victims"] == ch["preempted"] + ch["migrated"]
+    assert ch["killed"] == 0
+
+
+def test_ocs_degraded_is_fabric_only():
+    sc = SCENARIOS["ocs_degraded"]
+    assert sc.fault_kw.get("num_fabric_faults", 0) > 0
+    assert sc.fault_kw.get("num_node_faults", 0) == 0
+    rec = _record("ocs_degraded")
+    assert rec["num_faults"] > 0
+    assert rec["chaos"]["faults"] > 0
+
+
+def test_multi_tenant_exercises_priority_preemption():
+    rec = _record("multi_tenant")
+    ch = rec["chaos"]
+    # Fault victims alone produce at most `victims` evictions; the
+    # surplus preempt/migrate events are priority preemptions.
+    assert ch["preempted"] + ch["migrated"] > ch["victims"]
+
+
+def test_bursty_raises_arrival_cv_but_keeps_mean():
+    burstiness = SCENARIOS["bursty"].trace_kw["arrival_burstiness"]
+    assert burstiness > 0
+    kw = dict(num_jobs=400, seed=0, cluster_xpus=512, size_max=512)
+    smooth = generate_trace(TraceConfig(**kw))
+    spiky = generate_trace(TraceConfig(arrival_burstiness=burstiness,
+                                       **kw))
+
+    def gaps(jobs):
+        a = sorted(j.arrival for j in jobs)
+        return [a[i + 1] - a[i] for i in range(len(a) - 1)]
+
+    def cv(xs):
+        mu = sum(xs) / len(xs)
+        return math.sqrt(sum((x - mu) ** 2 for x in xs) / len(xs)) / mu
+
+    gs, gb = gaps(smooth), gaps(spiky)
+    # burstiness preserves the mean inter-arrival (same offered load) …
+    assert sum(gb) / len(gb) == pytest.approx(sum(gs) / len(gs), rel=0.15)
+    # … while inflating its variability
+    assert cv(gb) > cv(gs) + 0.2
+
+
+def test_scenario_summary_and_chaos_metrics_consistent():
+    for name in sorted(SCENARIOS):
+        rec = _record(name)
+        assert rec["scenario"] == name and rec["policy"] == "rfold"
+        s, ch = rec["summary"], rec["chaos"]
+        assert 0.0 <= ch["util_overall"] <= 1.0
+        assert 0.0 <= s["jcr"] <= 1.0
+        assert ch["dip_depth"] >= 0.0
+        if ch["faults"] == 0:
+            # no degradation window: pre-fault spans the whole run
+            assert ch["util_pre_fault"] == pytest.approx(
+                ch["util_overall"])
+            assert ch["util_dip_min"] is None
+        if ch["recovered"]:
+            assert ch["time_to_recover"] >= 0.0
+
+
+def test_policies_comparable_within_scenario():
+    """Different policies in the same scenario must face the *same*
+    fault timeline (same times, same flat node draws) or the
+    cross-policy comparison in BENCH_chaos.json is meaningless."""
+    a = _record("node_churn", policy="rfold",
+                policy_kw=dict(num_xpus=512, cube_n=4))
+    b = _record("node_churn", policy="firstfit",
+                policy_kw=dict(dims=(8, 8, 8)))
+    assert a["num_faults"] == b["num_faults"]
+    assert a["chaos"]["faults"] == b["chaos"]["faults"]
+
+
+def test_keep_result_returns_full_simulation():
+    rec = _record("node_churn", keep_result=True)
+    result = rec["_result"]
+    assert result.chaos is not None
+    assert len(result.jobs) == rec["num_jobs"] == 60
+    evicted = sum(j.preemptions + j.migrations for j in result.jobs)
+    assert evicted >= rec["chaos"]["victims"]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

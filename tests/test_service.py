@@ -9,8 +9,11 @@ import pytest
 
 from repro.api import (JobShape, Scheduler, SchedulerConfig, Simulator,
                        TraceConfig, generate_trace, make_policy)
-from repro.serve.scheduler import (DROPPED, EV_RECONFIG, EV_RELEASE, EV_SETUP,
-                                   PLACED, QUEUED, REJECTED, AllocatorCore)
+from repro.serve.scheduler import (DROPPED, EV_FAULT, EV_MIGRATE,
+                                   EV_PREEMPT, EV_RECONFIG, EV_RELEASE,
+                                   EV_REPAIR, EV_SETUP, MIGRATED, PLACED,
+                                   PREEMPTED, QUEUED, REJECTED,
+                                   AllocatorCore)
 from repro.sim.fleet import QueryBroker
 
 SMALL = dict(num_xpus=64, cube_n=4)      # one 4^3 cube: trivially full
@@ -304,3 +307,163 @@ def test_daemon_shares_query_broker():
         assert (shared.status()["state_digest"]
                 == plain.status()["state_digest"])
     assert broker.stats.requests > 0  # daemon queries really brokered
+
+
+# ------------------------------------------------- chaos ops (PR 8)
+def medium_scheduler(**kw):
+    return Scheduler(SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                                     **kw))
+
+
+def test_preempt_roundtrip_requeues_at_head():
+    with medium_scheduler() as s:
+        a = s.submit((4, 4, 4))
+        b = s.submit((2, 2, 2))
+        assert a["outcome"] == b["outcome"] == PLACED
+        r = s.preempt(a["job_id"])
+        assert r["outcome"] == PREEMPTED
+        st = s.status()
+        assert st["queue_depth"] == 1 and st["allocated"] == 1
+        # deliberately NOT auto-drained: the head would re-place into
+        # its own hole. The next scheduling point re-places it.
+        d = s.done(b["job_id"])
+        assert [x["job_id"] for x in d["started"]] == [a["job_id"]]
+        evs = [e["event"] for e in s.events(max_wait=2.0)]
+        assert EV_PREEMPT in evs
+
+
+def test_preempt_requires_allocation():
+    with medium_scheduler() as s:
+        q = s.submit((4, 4, 4))
+        s.preempt(q["job_id"])
+        with pytest.raises(RuntimeError, match="not allocated"):
+            s.preempt(q["job_id"])  # already queued, not allocated
+        with pytest.raises(RuntimeError, match="not"):
+            s.preempt(12345)
+
+
+def test_migrate_replaces_when_space_else_preempts():
+    with medium_scheduler() as s:
+        a = s.submit((4, 4, 4))
+        r = s.migrate(a["job_id"])
+        assert r["outcome"] == MIGRATED
+        assert r["placement"]["shape"] == [4, 4, 4]
+        assert s.status()["allocated"] == 1
+        evs = [e["event"] for e in s.events(max_wait=2.0)]
+        assert EV_MIGRATE in evs
+        # Migration is work-conserving: even in a full cluster the
+        # released hole is available to the re-place, so a migrate
+        # never degrades an allocated job into a queued one.
+        ids = [s.submit((4, 4, 4))["job_id"] for _ in range(7)]
+        assert s.status()["busy_xpus"] == 512
+        r2 = s.migrate(ids[-1])
+        assert r2["outcome"] == MIGRATED
+        assert s.status()["queue_depth"] == 0
+
+
+def test_fault_replan_failure_preempts_victim():
+    """When a fault's victims cannot be re-placed (every other cube
+    full), the disposition degrades to PREEMPTED: the victim is queued
+    at the head, never dropped."""
+    with medium_scheduler() as s:
+        ids = [s.submit((4, 4, 4))["job_id"] for _ in range(8)]
+        assert s.status()["busy_xpus"] == 512
+        r = s.fault("node", [(0, 0, 0, 0)])
+        assert r["ok"] and len(r["victims"]) == 1
+        assert r["victims"][0]["outcome"] == PREEMPTED
+        st = s.status()
+        assert st["queue_depth"] == 1 and st["allocated"] == 7
+        # repair brings the cube back and drains the queued victim
+        rep = s.repair("node", [(0, 0, 0, 0)])
+        assert [x["job_id"] for x in rep["started"]] == \
+            [r["victims"][0]["job_id"]]
+        assert s.status()["allocated"] == 8
+
+
+def test_fault_evicts_and_replans_victims():
+    with medium_scheduler() as s:
+        a = s.submit((4, 4, 4))
+        b = s.submit((2, 4, 8))
+        assert a["outcome"] == b["outcome"] == PLACED
+        r = s.fault("node", [(0, 0, 0, 0)])
+        assert r["ok"] and r["applied"] == [[0, 0, 0, 0]]
+        # exactly the job(s) on cube 0 were evicted, each replanned
+        assert r["victims"]
+        for v in r["victims"]:
+            assert v["outcome"] in (PREEMPTED, MIGRATED)
+        # plenty of healthy cubes: eviction must not lose capacity
+        st = s.status()
+        assert st["allocated"] + st["queue_depth"] == 2
+        evs = [e["event"] for e in s.events(max_wait=2.0)]
+        assert EV_FAULT in evs
+        assert EV_MIGRATE in evs or EV_PREEMPT in evs
+
+
+def test_fault_on_free_nodes_has_no_victims():
+    with small_scheduler() as s:
+        r = s.fault("node", [(0, 0, 0, 0)])
+        assert r["ok"] and r["victims"] == []
+        assert r["applied"] == [[0, 0, 0, 0]]
+        assert EV_FAULT in [e["event"] for e in s.events(max_wait=2.0)]
+
+
+def test_repair_restores_capacity_and_drains():
+    with small_scheduler() as s:
+        s.fault("node", [(0, 0, 0, 0)])
+        q = s.submit((4, 4, 4))          # whole cube: blocked by fault
+        assert q["outcome"] == QUEUED
+        r = s.repair("node", [(0, 0, 0, 0)])
+        assert r["ok"] and r["applied"] == [[0, 0, 0, 0]]
+        assert [x["job_id"] for x in r["started"]] == [q["job_id"]]
+        assert EV_REPAIR in [e["event"] for e in s.events(max_wait=2.0)]
+
+
+def test_repair_of_never_failed_is_noop():
+    with small_scheduler() as s:
+        r = s.repair("node", [(0, 1, 2, 3)])
+        assert r["ok"] and r["applied"] == []
+        assert s.status()["journal_ops"] == 1  # still journaled
+
+
+def test_ocs_port_fault_over_wire():
+    with medium_scheduler() as s:
+        a = s.submit((8, 4, 4))  # 2-cube chained job
+        assert a["outcome"] == PLACED
+        r = s.fault("ocs_port", [0])
+        assert r["ok"] and r["applied"] == [0]
+        if r["victims"]:  # chained through cube 0: evicted + replanned
+            assert all(v["outcome"] in (PREEMPTED, MIGRATED)
+                       for v in r["victims"])
+        s.repair("ocs_port", [0])
+        assert s.status()["ok"]
+
+
+def test_crash_under_fault_replays_chaos_ops(tmp_path):
+    """The chaos ops are journaled as intent and replayed: killing the
+    daemon mid-scenario (faults + preempt + migrate + repair in the
+    journal, no final checkpoint) must restore a byte-identical state
+    digest — including failed masks, cut links and shape bookkeeping."""
+    cfg = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                          checkpoint_dir=str(tmp_path),
+                          checkpoint_every=1)
+    s = Scheduler(cfg).start()
+    for dims in [(4, 4, 4), (2, 4, 8), (4, 4, 8)]:
+        s.submit(dims)  # 256 of 512 XPUs: victims can migrate
+    assert s.fault("node", [(0, 0, 0, 0), (1, 0, 0, 0)])["applied"]
+    s.fault("ocs_port", [5])
+    s.preempt(0)
+    s.migrate(1)
+    s.repair("node", [(0, 0, 0, 0)])
+    before = s.status()
+    s.kill()  # crash: no final checkpoint
+
+    s2 = Scheduler(cfg).start()
+    try:
+        after = s2.status()
+        assert after["state_digest"] == before["state_digest"]
+        assert after["journal_ops"] == before["journal_ops"]
+        # the recovered daemon still knows about the standing fault
+        q = s2.submit((4, 4, 4), job_id=900)
+        assert q["outcome"] in (PLACED, QUEUED)
+    finally:
+        s2.stop()

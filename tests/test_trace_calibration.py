@@ -99,5 +99,92 @@ def test_preset_trace_is_deterministic():
         [(j.arrival, j.duration, j.shape.dims) for j in b]
 
 
+# ------------------------------------- chaos-layer trace knobs (PR 8)
+def _spearman(x, y):
+    rx = np.argsort(np.argsort(x)).astype(float)
+    ry = np.argsort(np.argsort(y)).astype(float)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    return float((rx * ry).sum() /
+                 math.sqrt((rx ** 2).sum() * (ry ** 2).sum()))
+
+
+def test_default_knobs_are_byte_identical_to_legacy():
+    """corr=0, burstiness=0, priority_levels=1 must take the legacy
+    sampling path exactly — same RNG draw order, same trace — so every
+    pre-chaos result in the repo stays reproducible."""
+    legacy = _trace(TraceConfig(num_jobs=300, seed=11))
+    explicit = _trace(TraceConfig(num_jobs=300, seed=11,
+                                  size_duration_corr=0.0,
+                                  arrival_burstiness=0.0,
+                                  priority_levels=1))
+    assert [(j.arrival, j.duration, j.shape.dims, j.priority)
+            for j in legacy] == \
+        [(j.arrival, j.duration, j.shape.dims, j.priority)
+         for j in explicit]
+    assert all(j.priority == 0 for j in legacy)
+
+
+def test_size_duration_rank_correlation_monotone_in_rho():
+    """The Gaussian copula must actually couple size and duration, and
+    more rho means more coupling."""
+    rhos = [0.0, 0.3, 0.6, 0.9]
+    spear = []
+    for rho in rhos:
+        jobs = _trace(TraceConfig(num_jobs=20_000, seed=12,
+                                  size_duration_corr=rho))
+        sizes = np.array([j.shape.size for j in jobs], dtype=float)
+        durs = np.array([j.duration for j in jobs])
+        spear.append(_spearman(sizes, durs))
+    assert abs(spear[0]) < 0.05                  # rho=0: uncorrelated
+    for lo, hi in zip(spear, spear[1:]):
+        assert hi > lo + 0.1                     # strictly increasing
+    assert spear[-1] > 0.6                       # rho=0.9: strong
+
+
+def test_copula_preserves_both_marginals():
+    """Coupling must not distort either marginal: sizes still follow
+    the truncated exponential, durations still lognormal with the
+    configured median/sigma."""
+    cfg = TraceConfig(num_jobs=20_000, seed=13, size_duration_corr=0.7)
+    jobs = _trace(cfg)
+    durs = np.array([j.duration for j in jobs])
+    assert np.median(durs) == pytest.approx(cfg.duration_median_s,
+                                            rel=0.05)
+    assert np.std(np.log(durs)) == pytest.approx(cfg.duration_sigma,
+                                                 rel=0.03)
+    sizes = np.array([j.shape.size for j in jobs], dtype=float)
+    base = np.array([j.shape.size for j in
+                     _trace(TraceConfig(num_jobs=20_000, seed=13))],
+                    dtype=float)
+    # same post-rounding size distribution as the uncorrelated draw
+    for q in (0.25, 0.5, 0.75, 0.9):
+        assert np.quantile(sizes, q) == pytest.approx(
+            np.quantile(base, q), rel=0.15), q
+
+
+def test_burstiness_preserves_mean_interarrival():
+    """Hyperexponential arrivals keep the offered load: the two-phase
+    mix is calibrated so 0.75(1-b) + 0.25(1+3b) = 1."""
+    ratios, cvs = [], []
+    for seed in range(5):
+        kw = dict(num_jobs=4000, seed=seed)
+        smooth = np.diff([j.arrival for j in _trace(TraceConfig(**kw))])
+        spiky = np.diff([j.arrival for j in _trace(
+            TraceConfig(arrival_burstiness=0.7, **kw))])
+        ratios.append(float(spiky.mean() / smooth.mean()))
+        cvs.append(float(spiky.std() / spiky.mean()))
+    assert np.mean(ratios) == pytest.approx(1.0, abs=0.1)
+    assert min(cvs) > 1.3  # markedly burstier than Poisson's CV=1
+
+
+def test_priority_levels_assign_uniform_priorities():
+    jobs = _trace(TraceConfig(num_jobs=6000, seed=14,
+                              priority_levels=3))
+    counts = np.bincount([j.priority for j in jobs], minlength=3)
+    assert counts.sum() == 6000 and len(counts) == 3
+    assert counts.min() > 6000 / 3 * 0.8  # roughly uniform tiers
+
+
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])
