@@ -54,9 +54,9 @@ def _configs_for(which: str):
 
 def _run_matrix(configs, runs: int, num_jobs: int, load: float,
                 seed0: int, workers, ckpt_dir, emit=print,
-                trace_kw: Dict = None, fleet_size=None):
+                trace_kw: Dict = None, fleet_size=None, scenario=None):
     tasks = make_tasks(configs, runs, num_jobs, load, seed0,
-                       trace_kw=trace_kw)
+                       trace_kw=trace_kw, scenario=scenario)
     runner = EvalRunner(checkpoint_dir=ckpt_dir, workers=workers,
                         emit=emit, fleet_size=fleet_size)
     records = runner.run(tasks)
@@ -174,7 +174,21 @@ def main(argv=None) -> None:
                     help="named TraceConfig calibration preset (e.g. "
                          "'philly'); expanded into concrete trace fields "
                          "so checkpoint fingerprints stay value-based")
+    ap.add_argument("--scenario", type=str, default=None,
+                    help="run the matrix under a named chaos scenario "
+                         "(repro.sim.scenarios: node_churn, "
+                         "ocs_degraded, bursty, multi_tenant) — the "
+                         "degraded-fabric paper eval. Default: healthy "
+                         "baseline. Scenario runs fingerprint "
+                         "differently, so give them their own "
+                         "--ckpt-dir when checkpointing alongside the "
+                         "healthy sweep")
     args = ap.parse_args(argv)
+    if args.scenario:
+        from repro.sim.scenarios import SCENARIOS
+        if args.scenario not in SCENARIOS:
+            ap.error(f"unknown scenario {args.scenario!r}; "
+                     f"have {sorted(SCENARIOS)}")
     trace_kw = None
     if args.trace_preset:
         from repro.traces.generator import TRACE_PRESETS
@@ -204,7 +218,8 @@ def main(argv=None) -> None:
     aggs, stats, tasks = _run_matrix(_configs_for(args.which), runs, n,
                                      args.load, args.seed0, workers,
                                      ckpt_dir, trace_kw=trace_kw,
-                                     fleet_size=fleet_size)
+                                     fleet_size=fleet_size,
+                                     scenario=args.scenario)
     if args.prune_ckpt and ckpt_dir and os.path.isdir(ckpt_dir):
         from repro.eval import prune_checkpoints
         max_bytes = (args.ckpt_max_mb * 1024 * 1024
@@ -242,6 +257,7 @@ def main(argv=None) -> None:
             "config": {"runs": runs, "num_jobs": n, "load": args.load,
                        "seed0": args.seed0, "which": args.which,
                        "full": args.full,
+                       "scenario": args.scenario,
                        "trace_preset": args.trace_preset,
                        "workers": workers,
                        "fleet_size_arg": args.fleet_size,

@@ -194,6 +194,15 @@ def fleet_table(path: str = "BENCH_fleet.json") -> str:
                 f"{b.get('requeued')}, pad waste B="
                 f"{b.get('b_pad_waste')} K={b.get('k_pad_waste')}, "
                 f"free-count cache hits={b.get('fc_cache_hits')}")
+            if "engine_failovers" in b:
+                lines.append(
+                    f"\nResilience: steppers reaped="
+                    f"{b.get('steppers_reaped')}, engine retries="
+                    f"{b.get('engine_retries')}, failovers="
+                    f"{b.get('engine_failovers')} "
+                    f"(to {b.get('failover_engine')}), canary checks="
+                    f"{b.get('canary_checks')} mismatches="
+                    f"{b.get('canary_mismatches')}")
     head = bench.get("headline", {})
     if head:
         lines.append(
@@ -238,14 +247,28 @@ def service_table(path: str = "BENCH_service.json") -> str:
             f"depth bounded={adm.get('depth_bounded')}, rejects "
             f"stateless={adm.get('rejects_stateless')}, status under "
             f"load {adm.get('status_under_load_ms')}ms")
+    res = bench.get("resilience", {})
+    if res:
+        cnt = res.get("counters", {})
+        lines.append(
+            f"\nResilience crash drill ({res.get('ops')} ops, kills at "
+            f"{res.get('kills')}): digest identical="
+            f"{res.get('identical')}, resends clean="
+            f"{res.get('resends_clean')}, dedup hits "
+            f"{cnt.get('dedup_hits')}, WAL tail {cnt.get('wal_tail_ops')} "
+            f"ops, recovered {cnt.get('recovered_ops')} ops at last boot, "
+            f"lease expiries {cnt.get('lease_expiries')}")
     head = bench.get("headline", {})
     if head:
-        lines.append(
+        line = (
             f"\nHeadline: p99 {head.get('p99_ms')}ms, service overhead "
             f"{head.get('overhead_p99_ms')}ms "
             f"(<= {head.get('threshold_ms')}ms), "
             f"parity={head.get('parity')}, "
-            f"admission={head.get('admission')} -> pass={head.get('pass')}")
+            f"admission={head.get('admission')}")
+        if "resilience" in head:
+            line += f", resilience={head.get('resilience')}"
+        lines.append(line + f" -> pass={head.get('pass')}")
     return "\n".join(lines)
 
 

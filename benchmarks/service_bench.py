@@ -28,6 +28,13 @@ Three sections over the live daemon (``repro.serve.scheduler``):
   bound, and the daemon must still answer ``status`` promptly while
   overloaded.
 
+* **Resilience (PR 9).** The crash-loop drill
+  (``benchmarks.crash_loop``): the daemon is killed at seeded points
+  mid-churn, recovers from snapshot + WAL tail, absorbs the resent
+  in-flight ops through the journal-persisted dedup cache, and must
+  land on a final state digest byte-identical to an uninterrupted
+  control run. The dedup/lease/WAL counters land in the artifact.
+
   PYTHONPATH=src python -m benchmarks.service_bench [--quick] \
       [--out BENCH_service.json]
 """
@@ -200,6 +207,20 @@ def admission_section(flood: int) -> Dict:
     }
 
 
+def resilience_section(num_jobs: int, seed: int, kills: int) -> Dict:
+    """Crash-loop drill + the recovered daemon's resilience counters
+    (dedup hits, WAL tail length, recovered op count)."""
+    from benchmarks.crash_loop import run_drill
+    drill = run_drill(num_jobs, seed, kills)
+    return {
+        "ops": drill["ops"], "kills": drill["kills"],
+        "identical": drill["identical"],
+        "resends_clean": drill["crash"]["resends_clean"],
+        "counters": drill["crash"]["resilience"],
+        "pass": drill["pass"],
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -213,10 +234,12 @@ def main(argv=None) -> None:
     parity_jobs = 50 if args.quick else 120
     latency_jobs = 150 if args.quick else 500
     flood = 40 if args.quick else 200
+    drill_jobs, drill_kills = (36, 3) if args.quick else (60, 5)
 
     print(f"# service bench: parity {parity_jobs} jobs x "
           f"{len(PARITY_CONFIGS)} policies, latency {latency_jobs} jobs, "
-          f"admission flood {flood}")
+          f"admission flood {flood}, crash drill {drill_jobs} jobs / "
+          f"{drill_kills} kills")
 
     par = parity_section(parity_jobs, seed=3)
     for row in par["configs"]:
@@ -233,6 +256,12 @@ def main(argv=None) -> None:
     print(f"  admission: {adm['counts']} depth_bounded="
           f"{adm['depth_bounded']} stateless={adm['rejects_stateless']}")
 
+    res = resilience_section(drill_jobs, seed=17, kills=drill_kills)
+    print(f"  resilience: kills at {res['kills']} identical="
+          f"{res['identical']} dedup_hits="
+          f"{res['counters']['dedup_hits']} "
+          f"wal_tail={res['counters']['wal_tail_ops']}")
+
     headline = {
         "p99_ms": lat["remote"]["submit_p99_ms"],
         "local_p99_ms": lat["local"]["submit_p99_ms"],
@@ -240,17 +269,19 @@ def main(argv=None) -> None:
         "threshold_ms": args.threshold_ms,
         "parity": par["identical"],
         "admission": adm["pass"],
-        "pass": (par["identical"] and adm["pass"]
+        "resilience": res["pass"],
+        "pass": (par["identical"] and adm["pass"] and res["pass"]
                  and lat["overhead_p99_ms"] <= args.threshold_ms),
     }
     bench = {"parity": par, "latency": lat, "admission": adm,
-             "headline": headline}
+             "resilience": res, "headline": headline}
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"# headline: p99 {headline['p99_ms']}ms, service overhead "
           f"{headline['overhead_p99_ms']}ms "
           f"(<= {headline['threshold_ms']}ms) parity={headline['parity']} "
-          f"admission={headline['admission']} pass={headline['pass']}")
+          f"admission={headline['admission']} "
+          f"resilience={headline['resilience']} pass={headline['pass']}")
     print(f"# wrote {args.out}")
 
 

@@ -28,8 +28,11 @@ import atexit
 import threading
 from typing import Any, Dict, List, Optional
 
-# Engine selection (the one resolution point for fitmask engines).
-from repro.core.engineconfig import (EngineConfig, default_engine_name,
+# Engine selection (the one resolution point for fitmask engines) and
+# the runtime failover chain the fleet broker degrades down.
+from repro.core.engineconfig import (FAILOVER_CHAIN, EngineConfig,
+                                     default_engine_name,
+                                     failover_candidates,
                                      set_default_engine)
 # Placement policies + geometry.
 from repro.core.allocator import POLICIES, Placement, PlacementPolicy, make_policy
@@ -43,7 +46,8 @@ from repro.traces.generator import TraceConfig, generate_trace, generate_traces
 # Chaos layer: fault injection, degraded-fabric scenarios.
 from repro.sim.faults import (ChaosObserver, FaultConfig, FaultEvent,
                               FaultGenerator, FaultInjector)
-from repro.sim.scenarios import SCENARIOS, Scenario, run_scenario
+from repro.sim.scenarios import (SCENARIOS, Scenario, fault_schedule,
+                                 run_scenario)
 # Paper-scale evaluation.
 from repro.eval import (PAPER_FIG3_RATIOS, PAPER_FIG4_DELTAS, PAPER_TABLE1,
                         EvalRunner, EvalTask, aggregate_by_label, fig3, fig4,
@@ -56,8 +60,9 @@ __all__ = [
     # service
     "Scheduler", "SchedulerConfig", "SchedulerClient", "RemotePolicy",
     "submit", "events", "start_scheduler", "stop_scheduler",
-    # engine selection
+    # engine selection + runtime failover
     "EngineConfig", "set_default_engine", "default_engine_name",
+    "FAILOVER_CHAIN", "failover_candidates",
     # placement
     "POLICIES", "make_policy", "PlacementPolicy", "Placement", "JobShape",
     "TopologyEvent", "EventLog",
@@ -67,6 +72,7 @@ __all__ = [
     # chaos layer
     "FaultConfig", "FaultEvent", "FaultGenerator", "FaultInjector",
     "ChaosObserver", "Scenario", "SCENARIOS", "run_scenario",
+    "fault_schedule",
     # evaluation
     "EvalRunner", "EvalTask", "make_tasks", "aggregate_by_label",
     "table1", "fig3", "fig4",

@@ -34,6 +34,29 @@ from typing import Optional, Union
 
 ENGINE_ENV = "REPRO_FITMASK_ENGINE"
 
+# Failover order (PR 9): when a compiled engine starts raising at
+# runtime, the fleet broker degrades *down* this chain — each step
+# strictly reduces the stack it depends on, ending at the pure-numpy
+# host engine that cannot lose a backend. The chain is total over the
+# compiled tiers; registry engines outside it (e.g. ``ref``) degrade
+# straight to numpy.
+FAILOVER_CHAIN = ("pallas", "jax", "numpy")
+
+
+def failover_candidates(name: str) -> tuple:
+    """Engines to try, in order, after ``name`` fails at runtime.
+    Numpy is the floor (empty tuple — nothing left to fail over to);
+    unknown names also return empty (a custom engine *instance* has no
+    registry identity, so the broker never fails it over — errors
+    propagate, preserving the historical contract)."""
+    try:
+        name = canonical_engine_name(name)
+    except KeyError:
+        return ()
+    if name in FAILOVER_CHAIN:
+        return FAILOVER_CHAIN[FAILOVER_CHAIN.index(name) + 1:]
+    return ("numpy",)
+
 # Process-wide programmatic default (the ``set_default_engine`` knob).
 _default_engine: Optional[str] = None
 # The env var warns once per process, not once per query.

@@ -39,6 +39,7 @@ import json
 import os
 import re
 import time
+import zlib
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -70,14 +71,22 @@ class EvalTask:
     load: float = 1.5
     trace_kw: Dict = field(default_factory=dict)   # extra TraceConfig fields
     sim_kw: Dict = field(default_factory=dict)     # extra Simulator kwargs
+    # Named chaos scenario (repro.sim.scenarios) to run this task
+    # under: its trace/fault/sim overrides are applied worker-side and
+    # the record gains the chaos degradation block. None = healthy.
+    scenario: Optional[str] = None
 
     def fingerprint(self) -> str:
         """Hash of every field that affects the run's outcome. The
         display label is deliberately excluded: renaming a config, or
         evaluating one config under two labels (the ablation arms do),
-        must neither invalidate nor duplicate checkpoints."""
+        must neither invalidate nor duplicate checkpoints. A None
+        scenario is dropped before hashing so every pre-scenario
+        checkpoint store keeps resuming."""
         fields = asdict(self)
         fields.pop("label")
+        if fields.get("scenario") is None:
+            fields.pop("scenario", None)
         blob = json.dumps(fields, sort_keys=True, default=str)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -106,16 +115,43 @@ def iter_checkpoints(checkpoint_dir: str):
                 yield os.path.join(root, name)
 
 
+def record_crc(rec: Dict) -> int:
+    """Content CRC of a checkpoint record (over canonical JSON, the
+    ``_crc32`` field itself excluded) — file formatting and key order
+    don't matter, payload bytes do."""
+    body = {k: v for k, v in rec.items() if k != "_crc32"}
+    return zlib.crc32(json.dumps(body, sort_keys=True,
+                                 default=str).encode())
+
+
+def verify_record(rec: Dict) -> bool:
+    """True when the record's self-CRC matches (or when it predates
+    CRC framing — legacy checkpoints keep loading)."""
+    crc = rec.get("_crc32")
+    if crc is None:
+        return True
+    try:
+        return int(crc) == record_crc(rec)
+    except (TypeError, ValueError):
+        return False
+
+
 def save_checkpoint(checkpoint_dir: str, task: "EvalTask",
                     rec: Dict) -> None:
-    """Atomically write one task's record into the (sharded) store."""
+    """Atomically + durably write one task's record into the (sharded)
+    store: the record carries a self-CRC (loaders reject bit-rot
+    instead of trusting it), the tmp file is fsynced before the rename
+    (a crash can't publish a half-written file under the final name),
+    and the rename is atomic (a checkpoint is whole or absent)."""
     path = os.path.join(shard_dir(checkpoint_dir, task.fingerprint()),
                         task.checkpoint_name())
     os.makedirs(os.path.dirname(path), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(rec, f)
-    os.replace(tmp, path)   # atomic: a checkpoint is whole or absent
+        json.dump({**rec, "_crc32": record_crc(rec)}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def prune_checkpoints(checkpoint_dir: str, tasks: Sequence["EvalTask"],
@@ -170,14 +206,18 @@ def prune_checkpoints(checkpoint_dir: str, tasks: Sequence["EvalTask"],
 def make_tasks(configs: Sequence[Tuple[str, str, dict]], runs: int,
                num_jobs: int, load: float, seed0: int,
                trace_kw: Optional[dict] = None,
-               sim_kw: Optional[dict] = None) -> List[EvalTask]:
+               sim_kw: Optional[dict] = None,
+               scenario: Optional[str] = None) -> List[EvalTask]:
     """Expand ``(label, policy, policy_kw)`` configs into the run
-    matrix, with paired per-run seeds across configs."""
+    matrix, with paired per-run seeds across configs. ``scenario``
+    runs every cell under a named chaos scenario (degraded-fabric
+    paper eval); ``None`` is the healthy paper baseline."""
     return [
         EvalTask(label=label, policy=policy, policy_kw=dict(kw),
                  run_idx=r, seed=derive_seed(seed0, r),
                  num_jobs=num_jobs, load=load,
-                 trace_kw=dict(trace_kw or {}), sim_kw=dict(sim_kw or {}))
+                 trace_kw=dict(trace_kw or {}), sim_kw=dict(sim_kw or {}),
+                 scenario=scenario)
         for label, policy, kw in configs for r in range(runs)
     ]
 
@@ -199,19 +239,39 @@ def run_task(task: EvalTask, mask_client=None) -> Dict:
     from repro.sim.simulator import Simulator
     from repro.traces.generator import TraceConfig, generate_trace
 
+    sc = None
+    if task.scenario is not None:
+        from repro.sim.scenarios import SCENARIOS
+        sc = SCENARIOS[task.scenario]
     cfg = TraceConfig(num_jobs=task.num_jobs, seed=task.seed,
-                      target_load=task.load, **task.trace_kw)
+                      target_load=task.load,
+                      **{**task.trace_kw, **(sc.trace_kw if sc else {})})
     jobs = generate_trace(cfg)
     # Constructor injection: the client rides in with the policy
     # rather than being bolted on post-construction (the deprecated
     # install_mask_client dance).
     policy = make_policy(task.policy, mask_client=mask_client,
                          **task.policy_kw)
+    sim_kw = dict(task.sim_kw)
+    observer = None
+    if sc is not None:
+        # Scenario cells inject the same deterministic fault stream
+        # run_scenario would (seed derivation shared), and watch it
+        # with a chaos observer for the degradation block.
+        from repro.sim.faults import ChaosObserver
+        from repro.sim.scenarios import fault_schedule
+        model = getattr(policy, "cluster", None)
+        if model is None:
+            model = policy.torus
+        observer = ChaosObserver()
+        sim_kw.update(sc.sim_kw)
+        sim_kw["faults"] = fault_schedule(sc, model, jobs, task.seed)
+        sim_kw["observer"] = observer
     t0 = time.perf_counter()
-    res = Simulator(policy, jobs, **task.sim_kw).run()
+    res = Simulator(policy, jobs, **sim_kw).run()
     wall = time.perf_counter() - t0
     levels, cdf = utilization_cdf(res)
-    return {
+    rec = {
         "fingerprint": task.fingerprint(),
         "label": task.label,
         "run_idx": task.run_idx,
@@ -221,6 +281,10 @@ def run_task(task: EvalTask, mask_client=None) -> Dict:
         "cdf": [float(x) for x in cdf],
         "sim_s": round(wall, 4),
     }
+    if sc is not None:
+        rec["scenario"] = sc.name
+        rec["chaos"] = res.chaos
+    return rec
 
 
 # -- fleet path --------------------------------------------------------
@@ -376,6 +440,9 @@ class EvalRunner:
                 rec = json.load(f)
         except (OSError, ValueError):
             return None
+        if not verify_record(rec):
+            return None   # bit-rot: ignored and re-executed
+        rec.pop("_crc32", None)
         if rec.get("fingerprint") != task.fingerprint():
             return None
         rec["label"] = task.label   # restamp: label is display-only
@@ -493,7 +560,10 @@ class EvalRunner:
                       "batched_calls", "grids", "flush_all_parked",
                       "flush_quorum", "flush_timeout", "requeued",
                       "padded_grids", "k_slots", "k_needed",
-                      "fc_inline", "fc_cache_hits", "fc_cache_misses")
+                      "fc_inline", "fc_cache_hits", "fc_cache_misses",
+                      "steppers_reaped", "engine_retries",
+                      "engine_failovers", "canary_checks",
+                      "canary_mismatches")
         agg = {k: sum(s.get(k, 0) for s in broker_totals)
                for k in count_keys}
         agg["max_grids"] = max((s["max_grids"] for s in broker_totals),

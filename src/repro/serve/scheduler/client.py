@@ -8,6 +8,22 @@ request/reply (a lock serializes calls) and reconnectable — daemon
 state is server-side, so a reconnected client resumes where it left
 off.
 
+Retries are **idempotent** (PR 9): every request carries a
+client-generated ``request_id`` (``"<client-id>:<seq>"``) which the
+daemon dedups against its journal-backed cache, so a resent op after
+a connection drop or timeout is applied exactly once. On a broken
+socket or per-op timeout, :meth:`_request` reconnects with
+exponential backoff + jitter and resends the *same* request_id up to
+``max_retries`` times. The read buffer is cleared on every reconnect
+— a half-received pre-reconnect line must never be parsed against
+the new connection's stream (stale complete replies are additionally
+dropped by seq). ``op_timeout`` bounds each attempt; exhausting all
+attempts raises ``TimeoutError``/``ConnectionError``.
+
+With ``lease_timeout`` configured daemon-side, call
+:meth:`start_heartbeat` (the :class:`Scheduler` facade does this
+automatically) so an idle client keeps its lease over submitted jobs.
+
 :class:`RemotePolicy` adapts the client to the
 :class:`~repro.core.allocator.PlacementPolicy` surface, which is what
 rewires the discrete-event simulator as the service's first client:
@@ -19,9 +35,11 @@ asserted in CI).
 """
 from __future__ import annotations
 
+import random
 import socket
 import threading
 import time
+import uuid
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.allocator import Placement, PlacementPolicy
@@ -34,22 +52,36 @@ class SchedulerClient:
     """JSON-lines request/reply + event stream over one TCP socket."""
 
     def __init__(self, address: Tuple[str, int], subscribe: bool = False,
-                 connect_timeout: float = 5.0):
+                 connect_timeout: float = 5.0,
+                 op_timeout: Optional[float] = 30.0,
+                 max_retries: int = 4, backoff: float = 0.05,
+                 client_id: Optional[str] = None):
         self.address = (address[0], int(address[1]))
         self._want_subscribe = subscribe
         self._connect_timeout = connect_timeout
+        self.op_timeout = op_timeout
+        self.max_retries = max(0, int(max_retries))
+        self.backoff = backoff
+        # Stable identity: the daemon keys leases and idempotency on
+        # it. Survives reconnects by construction.
+        self.client_id = client_id or uuid.uuid4().hex[:12]
         self._lock = threading.Lock()
         self._seq = 0
         self._buf = bytearray()
         self._events: List[Dict[str, Any]] = []
         self._sock: Optional[socket.socket] = None
+        self.retries = 0          # resend attempts that reconnected
+        self._hb_stop: Optional[threading.Event] = None
+        self._hb_thread: Optional[threading.Thread] = None
         self.connect()
 
     # -- connection ----------------------------------------------------
     def connect(self) -> None:
         """Dial (or re-dial) the daemon. Retries briefly so a client
         racing the daemon's bind — or reconnecting across a daemon
-        restart — just works."""
+        restart — just works. The read buffer is cleared: bytes of a
+        half-received line from the old connection must never prefix
+        the new stream (regression-tested)."""
         self.close()
         deadline = time.monotonic() + self._connect_timeout
         last: Optional[Exception] = None
@@ -67,7 +99,7 @@ class SchedulerClient:
                 f"cannot reach scheduler at {self.address}: {last}")
         self._buf = bytearray()
         if self._want_subscribe:
-            self._call("subscribe")
+            self._send_one("subscribe")
 
     def close(self) -> None:
         if self._sock is not None:
@@ -76,6 +108,32 @@ class SchedulerClient:
             except OSError:
                 pass
             self._sock = None
+
+    def stop_heartbeat(self) -> None:
+        if self._hb_stop is not None:
+            self._hb_stop.set()
+            self._hb_stop = None
+            self._hb_thread = None
+
+    def start_heartbeat(self, interval: float) -> None:
+        """Renew this client's lease every ``interval`` seconds from a
+        daemon thread (any request renews too — the thread only
+        matters while the client is otherwise idle). Errors are
+        swallowed: a dead daemon fails the next real request."""
+        self.stop_heartbeat()
+        stop = self._hb_stop = threading.Event()
+
+        def beat() -> None:
+            while not stop.wait(interval):
+                try:
+                    self.heartbeat()
+                except (ConnectionError, TimeoutError, OSError,
+                        RuntimeError):
+                    pass
+
+        self._hb_thread = threading.Thread(
+            target=beat, name="repro-scheduler-heartbeat", daemon=True)
+        self._hb_thread.start()
 
     # -- line transport ------------------------------------------------
     def _readline(self, timeout: Optional[float]) -> Optional[bytes]:
@@ -99,31 +157,91 @@ class SchedulerClient:
                 raise ConnectionError("scheduler closed the connection")
             self._buf.extend(chunk)
 
-    def _call(self, op: str, **fields) -> Dict[str, Any]:
+    def _await_reply(self, seq: int,
+                     timeout: Optional[float]) -> Dict[str, Any]:
+        """Read until the reply tagged ``seq`` arrives: pushed events
+        are buffered, stale pre-reconnect replies dropped by seq."""
+        deadline = (time.monotonic() + timeout
+                    if timeout is not None else None)
+        while True:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"no reply from {self.address} within "
+                        f"{self.op_timeout}s")
+            line = self._readline(remaining)
+            if line is None:
+                raise TimeoutError(
+                    f"no reply from {self.address} within "
+                    f"{self.op_timeout}s")
+            resp = protocol.decode(line)
+            if "event" in resp:
+                self._events.append(resp)
+                continue
+            if resp.get("seq") == seq:
+                return resp
+            # Stale reply from a pre-reconnect request: drop it.
+
+    def _send_one(self, op: str, **fields) -> Dict[str, Any]:
+        """One-shot request on the current socket — no retry loop.
+        Used inside :meth:`connect` (re-subscribing a fresh
+        connection), where the reconnect machinery must not recurse."""
+        self._seq += 1
+        seq = self._seq
+        msg = {"op": op, "seq": seq, "client": self.client_id, **fields}
+        assert self._sock is not None, "client is closed"
+        self._sock.sendall(protocol.encode(msg))
+        return self._await_reply(seq, self.op_timeout)
+
+    def _request(self, op: str, _retries: Optional[int] = None,
+                 **fields) -> Dict[str, Any]:
+        """Send one op; on a broken connection or per-op timeout,
+        reconnect (exponential backoff + jitter) and resend the same
+        ``request_id`` — the daemon's dedup cache makes the retry
+        exactly-once for journaled ops. ``_retries`` overrides
+        ``max_retries`` for ops where retrying is pointless
+        (``shutdown`` of a daemon that already went away)."""
+        retries = self.max_retries if _retries is None else _retries
         with self._lock:
             self._seq += 1
             seq = self._seq
-            msg = {"op": op, "seq": seq, **fields}
-            assert self._sock is not None, "client is closed"
-            self._sock.sendall(protocol.encode(msg))
-            while True:
-                line = self._readline(None)
-                assert line is not None
-                resp = protocol.decode(line)
-                if "event" in resp:
-                    self._events.append(resp)
-                    continue
-                if resp.get("seq") == seq:
-                    return resp
-                # Stale reply from a pre-reconnect request: drop it.
+            msg = {"op": op, "seq": seq, "client": self.client_id,
+                   "request_id": f"{self.client_id}:{seq}", **fields}
+            wire = protocol.encode(msg)
+            last: Optional[Exception] = None
+            for attempt in range(retries + 1):
+                if attempt:
+                    self.retries += 1
+                    delay = min(2.0, self.backoff * (2 ** (attempt - 1)))
+                    time.sleep(delay * (0.5 + random.random()))
+                try:
+                    if self._sock is None:
+                        self.connect()
+                    self._sock.sendall(wire)
+                    return self._await_reply(seq, self.op_timeout)
+                except (ConnectionError, TimeoutError, OSError) as e:
+                    last = e
+                    self.close()
+            assert last is not None
+            raise last
+
+    # Historical spelling (pre-PR 9); the retrying path is _request.
+    _call = _request
 
     def call(self, op: str, **fields) -> Dict[str, Any]:
         """Raw op; raises on protocol-level errors."""
-        resp = self._call(op, **fields)
+        resp = self._request(op, **fields)
         if not resp.get("ok", False):
             raise RuntimeError(f"scheduler {op} failed: "
                                f"{resp.get('error', resp)}")
         return resp
+
+    def heartbeat(self) -> Dict[str, Any]:
+        """Renew this client's lease (any request renews; this one
+        exists for otherwise-idle clients)."""
+        return self.call("heartbeat")
 
     # -- service surface -----------------------------------------------
     def submit(self, shape, job_id: Optional[int] = None) -> Dict[str, Any]:
@@ -161,7 +279,13 @@ class SchedulerClient:
         return self.call("sync")
 
     def shutdown(self) -> Dict[str, Any]:
-        return self.call("shutdown")
+        # No retries: re-dialing a daemon that is already gone only
+        # stalls the caller's teardown path.
+        resp = self._request("shutdown", _retries=0)
+        if not resp.get("ok", False):
+            raise RuntimeError(f"scheduler shutdown failed: "
+                               f"{resp.get('error', resp)}")
+        return resp
 
     def events(self, max_wait: float = 0.0) -> List[Dict[str, Any]]:
         """Drain pushed events: everything buffered, plus whatever

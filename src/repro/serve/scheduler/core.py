@@ -16,12 +16,27 @@ which buys atomic tmp+rename writes, fingerprint-prefix sharding and
 ``prune_checkpoints`` compatibility for free — and means a daemon
 restarted with a *different* config refuses to resume a stale journal
 (the fingerprint gates the load, exactly as eval resume does).
+
+Durability (PR 9) is snapshot + write-ahead tail: every journaled op
+is appended to a CRC32+length-framed WAL (``journal.py``) and fsynced
+**before** the reply is sent, so recovery is ``snapshot ⊕ WAL tail``
+— a crash between snapshots loses nothing acknowledged, and a torn
+trailing record is truncated away instead of poisoning recovery.
+Requests may carry a client-generated ``request_id``; replies to
+journaled ops are remembered in a bounded dedup cache (persisted via
+the journal itself — replay regenerates the identical replies), so a
+retried op after a reconnect is applied exactly once. Ops may also
+carry a ``client`` id, which makes the submitting client the job's
+*lease holder*: ``op_lease_expire`` (journaled with its resolved
+action, so replay never depends on current config) requeues or
+releases a dead client's jobs.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+from collections import OrderedDict
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -29,10 +44,11 @@ from repro.core.allocator import make_policy
 from repro.core.engineconfig import EngineConfig
 from repro.core.events import TopologyEvent
 from repro.core.geometry import JobShape
-from repro.eval.runner import save_checkpoint, shard_dir
+from repro.eval.runner import save_checkpoint, shard_dir, verify_record
 from repro.sim.faults import FaultEvent, FaultInjector
 
 from . import protocol
+from .journal import JournalWriter, recover_journal
 
 
 @dataclass
@@ -50,19 +66,39 @@ class SchedulerConfig:
     # Persistence: None disables checkpointing entirely.
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 64       # journaled ops between snapshots
+    # fsync every WAL append (durability); False trades the last few
+    # acknowledged ops for latency, crash *consistency* is unaffected.
+    fsync: bool = True
+    # Liveness: a client that stops heartbeating for lease_timeout
+    # seconds loses its lease; its jobs are requeued (work-preserving)
+    # or released, per lease_policy. None disables leases entirely.
+    lease_timeout: Optional[float] = None
+    lease_policy: str = "requeue"    # "requeue" | "release"
+    # Idempotency: replies to journaled ops are remembered per
+    # request_id so a retried op is applied exactly once. 0 disables.
+    dedup_cache: int = 1024
+    # Backpressure: per-subscriber pushed-event queue depth; a
+    # subscriber whose queue overflows is marked lagged and dropped.
+    subscriber_queue: int = 1024
     # Daemon bind address; port 0 = ephemeral (read it back after start).
     host: str = "127.0.0.1"
     port: int = 0
 
     def __post_init__(self):
         self.engine = EngineConfig.coerce(self.engine)
+        if self.lease_policy not in ("requeue", "release"):
+            raise ValueError("lease_policy must be 'requeue' or "
+                             f"'release', got {self.lease_policy!r}")
 
     # -- checkpoint-store duck-type (repro.eval.runner) ----------------
     def fingerprint(self) -> str:
         """Hash of every field that affects placement outcomes. The
-        transport fields (host/port) and checkpoint cadence are
-        excluded: moving the daemon or retuning snapshot frequency
-        must not orphan its journal."""
+        transport fields (host/port), checkpoint cadence and the
+        resilience knobs (fsync, leases, dedup, backpressure) are
+        excluded: moving the daemon or retuning snapshot frequency or
+        lease policy must not orphan its journal — lease expiries are
+        journaled with their *resolved* action, so replay never
+        consults the current lease_policy."""
         fields = {"policy": self.policy, "policy_kw": self.policy_kw,
                   "backfill": self.backfill, "max_queue": self.max_queue,
                   "engine": asdict(self.engine)}
@@ -80,7 +116,8 @@ class AllocatorCore:
     untagged event dicts to broadcast to subscribers."""
 
     JOURNALED = ("submit", "done", "try_place", "release",
-                 "preempt", "migrate", "fault", "repair")
+                 "preempt", "migrate", "fault", "repair",
+                 "lease_expire")
 
     def __init__(self, config: SchedulerConfig, mask_client=None):
         self.config = config
@@ -106,6 +143,19 @@ class AllocatorCore:
         self._replaying = False
         self._pending_topo: List[TopologyEvent] = []
         self.recovered_ops = 0
+        # Lease ownership: job_id -> client id, rebuilt by replay from
+        # the ``client`` field journaled ops carry.
+        self.owners: Dict[int, str] = {}
+        # Idempotency: request_id -> reply for journaled ops (bounded
+        # LRU; replay regenerates identical entries from the journal).
+        self._dedup: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self._current_rid: Optional[str] = None
+        self._current_client: Optional[str] = None
+        self._wal: Optional[JournalWriter] = None
+        self.counters: Dict[str, int] = {
+            "dedup_hits": 0, "lease_expiries": 0,
+            "wal_tail_ops": 0, "wal_truncated": 0,
+        }
 
     # -- topology listener --------------------------------------------
     def _on_topology(self, ev: TopologyEvent) -> None:
@@ -145,24 +195,47 @@ class AllocatorCore:
     def _journal_op(self, op: Dict[str, Any]) -> None:
         if self._replaying:
             return
+        if self._current_rid is not None:
+            op["rid"] = self._current_rid
+        if self._current_client is not None:
+            op["client"] = self._current_client
         self.journal.append(op)
         if not self.config.checkpoint_dir:
             return
+        # WAL first: the op is durable (framed, CRC'd, fsynced) before
+        # any reply can leave the daemon. ``i`` is the op's journal
+        # index — recovery uses it to skip records the snapshot
+        # already subsumes (crash between snapshot write and WAL
+        # reset must not double-apply).
+        self._wal_writer().append({"i": len(self.journal) - 1, **op})
         self._ops_since_sync += 1
         if (self.config.checkpoint_every
                 and self._ops_since_sync >= self.config.checkpoint_every):
             self.sync_checkpoint()
 
+    def _wal_path(self) -> str:
+        cfg = self.config
+        return os.path.join(shard_dir(cfg.checkpoint_dir,
+                                      cfg.fingerprint()),
+                            cfg.checkpoint_name() + ".wal")
+
+    def _wal_writer(self) -> JournalWriter:
+        if self._wal is None:
+            self._wal = JournalWriter(self._wal_path(),
+                                      fsync=self.config.fsync)
+        return self._wal
+
     def sync_checkpoint(self) -> Optional[str]:
         """Write the journal snapshot now (atomic tmp+rename via the
-        eval store). Returns the checkpoint path, or None when
-        persistence is off."""
+        eval store), then reset the WAL it subsumes. Returns the
+        checkpoint path, or None when persistence is off."""
         cfg = self.config
         if not cfg.checkpoint_dir:
             return None
         rec = {"fingerprint": cfg.fingerprint(), "format": 1,
                "next_id": self.next_id, "journal": self.journal}
         save_checkpoint(cfg.checkpoint_dir, cfg, rec)
+        self._wal_writer().reset()
         self._ops_since_sync = 0
         return os.path.join(shard_dir(cfg.checkpoint_dir,
                                       cfg.fingerprint()),
@@ -187,6 +260,9 @@ class AllocatorCore:
                     rec = json.load(f)
             except (OSError, ValueError):
                 continue
+            if not verify_record(rec):
+                continue   # bit-rot: a corrupt snapshot never replays
+            rec.pop("_crc32", None)
             if rec.get("fingerprint") == fp:
                 return rec
         return None
@@ -194,21 +270,49 @@ class AllocatorCore:
     @classmethod
     def recover(cls, config: SchedulerConfig,
                 mask_client=None) -> "AllocatorCore":
-        """Fresh core, or one rebuilt by replaying the stored journal.
+        """Fresh core, or one rebuilt by replaying snapshot + WAL tail.
         Placement is deterministic in op order, so the replayed
         occupancy grid, queue and in-flight set are byte-identical to
-        the pre-crash state (tested)."""
+        the pre-crash state (tested). A torn WAL tail is truncated at
+        the first corrupt record — everything acknowledged before the
+        crash precedes it by the fsync ordering."""
         core = cls(config, mask_client=mask_client)
         rec = cls.load_state(config)
-        if rec:
-            core._replay(rec)
+        base = list(rec["journal"]) if rec else []
+        tail: List[Dict[str, Any]] = []
+        truncated = False
+        if config.checkpoint_dir:
+            wal_recs, truncated = recover_journal(core._wal_path())
+            for w in wal_recs:
+                i = w.pop("i", None)
+                expected = len(base) + len(tail)
+                if i is not None and i < expected:
+                    continue   # already subsumed by the snapshot
+                if i is not None and i > expected:
+                    break      # gap — never replay past missing ops
+                tail.append(w)
+        full = base + tail
+        if full:
+            core._replay({"journal": full,
+                          "next_id": (rec or {}).get("next_id", 0)})
+        elif rec:
+            core.next_id = max(core.next_id, int(rec.get("next_id", 0)))
+        core.counters["wal_tail_ops"] = len(tail)
+        core.counters["wal_truncated"] = int(truncated)
         return core
 
     def _replay(self, rec: Dict[str, Any]) -> None:
         self._replaying = True
         try:
             for op in rec["journal"]:
-                self.apply(dict(op))
+                reply, _ = self.apply(dict(op))
+                rid = op.get("rid")
+                if rid is not None:
+                    # Replay regenerates the identical reply bytes
+                    # (determinism), repopulating the dedup cache: a
+                    # client retrying across a daemon crash still gets
+                    # exactly-once semantics.
+                    self._remember(rid, reply)
         finally:
             self._replaying = False
             self._pending_topo = []
@@ -220,16 +324,46 @@ class AllocatorCore:
     def apply(self, msg: Dict[str, Any]):
         """Dispatch one request dict -> (reply, events). Unknown ops
         and handler exceptions become error replies (the daemon must
-        survive malformed clients)."""
+        survive malformed clients).
+
+        Idempotency: a request whose ``request_id`` already produced a
+        journaled op returns the remembered reply without re-applying
+        (and without re-broadcasting events — the originals were
+        already pushed). Stateless outcomes (status, REJECTED, errors)
+        are not cached: re-evaluating them is safe by construction."""
         op = msg.get("op")
         handler = getattr(self, f"op_{op}", None)
         if handler is None:
             return {"ok": False, "error": f"unknown op {op!r}"}, []
+        rid = msg.get("request_id") or msg.get("rid")
+        if rid is not None and self.config.dedup_cache:
+            cached = self._dedup.get(rid)
+            if cached is not None:
+                self._dedup.move_to_end(rid)
+                self.counters["dedup_hits"] += 1
+                return dict(cached), []
+        self._current_rid = rid
+        self._current_client = msg.get("client")
+        before = len(self.journal)
         try:
-            return handler(msg)
+            reply, events = handler(msg)
         except Exception as e:  # noqa: BLE001 — protocol boundary
             self._pending_topo = []
             return {"ok": False, "error": f"{type(e).__name__}: {e}"}, []
+        finally:
+            self._current_rid = None
+            self._current_client = None
+        if rid is not None and len(self.journal) > before:
+            self._remember(rid, reply)
+        return reply, events
+
+    def _remember(self, rid: str, reply: Dict[str, Any]) -> None:
+        if not self.config.dedup_cache:
+            return
+        self._dedup[rid] = dict(reply)
+        self._dedup.move_to_end(rid)
+        while len(self._dedup) > self.config.dedup_cache:
+            self._dedup.popitem(last=False)
 
     @staticmethod
     def _shape(msg: Dict[str, Any]) -> JobShape:
@@ -266,6 +400,8 @@ class AllocatorCore:
         if not self.policy.can_ever_place(shape):
             return {"ok": True, "outcome": protocol.DROPPED,
                     "job_id": job_id}, []
+        if self._current_client is not None:
+            self.owners[job_id] = self._current_client
         placement = None
         if not self.queue or self.config.backfill:
             placement = self.policy.try_place(job_id, shape)
@@ -290,11 +426,13 @@ class AllocatorCore:
             self._journal_op({"op": "done", "job_id": job_id})
             self.policy.release(job_id)
             self.shapes.pop(job_id, None)
+            self.owners.pop(job_id, None)
             started = self._drain_fifo()
         elif job_id in queued:
             # Cancelled while queued.
             self._journal_op({"op": "done", "job_id": job_id})
             self.queue = [(j, s) for j, s in self.queue if j != job_id]
+            self.owners.pop(job_id, None)
             started = []
         else:
             return {"ok": False, "error": f"job {job_id} not known"}, []
@@ -345,6 +483,8 @@ class AllocatorCore:
         self._journal_op({"op": "try_place", "job_id": job_id,
                           "shape": list(shape.dims)})
         self.shapes[job_id] = shape.dims
+        if self._current_client is not None:
+            self.owners[job_id] = self._current_client
         return ({"ok": True, "outcome": protocol.PLACED,
                  "placement": self._placement_fields(placement)},
                 self._drain_topo())
@@ -356,6 +496,7 @@ class AllocatorCore:
         self._journal_op({"op": "release", "job_id": job_id})
         self.policy.release(job_id)
         self.shapes.pop(job_id, None)
+        self.owners.pop(job_id, None)
         return {"ok": True, "job_id": job_id}, self._drain_topo()
 
     # -- chaos ops (preemption, migration, fault injection) ------------
@@ -476,6 +617,83 @@ class AllocatorCore:
                  "started": started,
                  "queue_depth": len(self.queue)}, self._drain_topo())
 
+    # -- liveness ops ---------------------------------------------------
+    def op_heartbeat(self, msg: Dict[str, Any]):
+        """Lease renewal. State-free at the core: wall-clock lease
+        bookkeeping lives in the daemon (which touches the lease for
+        *every* request carrying a ``client`` id, heartbeats
+        included); the core only reports the configured policy so a
+        client can size its heartbeat interval."""
+        return {"ok": True, "client": msg.get("client"),
+                "lease_timeout": self.config.lease_timeout,
+                "lease_policy": self.config.lease_policy}, []
+
+    def op_lease_expire(self, msg: Dict[str, Any]):
+        """A client's lease lapsed: disposition every job it owns.
+        Journaled as intent *with the resolved action* — replay
+        re-executes the same disposition even if the configured
+        lease_policy has changed since.
+
+        ``requeue`` (work-preserving, the Borg eviction analogue):
+        running jobs are evicted back to the queue head in job-id
+        order; queued jobs simply stay queued. Ownership is retained —
+        a client reconnecting under the same id resumes its lease.
+        ``release``: running *and* queued jobs are dropped outright
+        and the freed capacity drains the queue."""
+        cid = str(msg["client"])
+        action = msg.get("action") or self.config.lease_policy
+        owned_alloc = sorted(j for j, c in self.owners.items()
+                             if c == cid and j in self.model.allocations)
+        owned_queued = [j for j, _ in self.queue
+                        if self.owners.get(j) == cid]
+        # A no-op expiry (nothing owned; or requeue with only queued
+        # jobs, which stay queued) is not journaled — deterministic
+        # to re-derive, and keeping it out of the journal keeps
+        # heartbeat-less idle clients free.
+        if not owned_alloc and (action != "release" or not owned_queued):
+            return {"ok": True, "client": cid, "action": action,
+                    "jobs": [], "queue_depth": len(self.queue)}, []
+        self._journal_op({"op": "lease_expire", "client": cid,
+                          "action": action})
+        self.counters["lease_expiries"] += 1
+        dispositions: List[Dict[str, Any]] = []
+        events: List[Dict[str, Any]] = []
+        started: List[Dict[str, Any]] = []
+        if action == "release":
+            for jid in owned_alloc:
+                self.policy.release(jid)
+                self.shapes.pop(jid, None)
+                self.owners.pop(jid, None)
+                dispositions.append({"job_id": jid, "outcome": "released"})
+                events.append({"event": protocol.EV_LEASE,
+                               "job_id": jid, "client": cid,
+                               "action": "release"})
+            drop = set(owned_queued)
+            if drop:
+                self.queue = [(j, s) for j, s in self.queue
+                              if j not in drop]
+                for jid in owned_queued:
+                    self.owners.pop(jid, None)
+                    dispositions.append({"job_id": jid,
+                                         "outcome": "released"})
+            started = self._drain_fifo()
+        else:
+            requeue: List[Tuple[int, Tuple[int, int, int]]] = []
+            for jid in owned_alloc:
+                dims = self.shapes.pop(jid)
+                self.policy.release(jid)
+                requeue.append((jid, dims))
+                dispositions.append({"job_id": jid,
+                                     "outcome": protocol.PREEMPTED})
+                events.append({"event": protocol.EV_LEASE,
+                               "job_id": jid, "client": cid,
+                               "action": "requeue"})
+            self.queue[0:0] = requeue
+        events = self._drain_topo() + events
+        return ({"ok": True, "client": cid, "action": action,
+                 "jobs": dispositions, "started": started,
+                 "queue_depth": len(self.queue)}, events)
+
     def op_can_ever_place(self, msg: Dict[str, Any]):
         shape = self._shape(msg)
         return {"ok": True,
@@ -496,6 +714,10 @@ class AllocatorCore:
             "next_id": self.next_id,
             "journal_ops": len(self.journal),
             "state_digest": self.state_digest(),
+            "resilience": {**self.counters,
+                           "dedup_entries": len(self._dedup),
+                           "owned_jobs": len(self.owners),
+                           "recovered_ops": self.recovered_ops},
         }
 
     def state_digest(self) -> str:

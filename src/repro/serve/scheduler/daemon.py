@@ -12,17 +12,43 @@ its placement queries coalesce into the same batched engine calls as
 concurrently running simulations — serving and simulation share one
 engine.
 
+Liveness (PR 9): every request carrying a ``client`` id renews that
+client's wall-clock lease; with ``lease_timeout`` configured, an
+expiry loop journals a ``lease_expire`` op (resolved action included,
+so replay is policy-independent) for clients that went silent, and
+their jobs are requeued or released per ``lease_policy``. Pushed
+events ride **bounded** per-subscriber queues drained by a writer
+task each — a subscriber that stops reading is marked lagged and
+dropped (connection closed) instead of buffering without bound or
+stalling the dispatch path behind its dead socket.
+
 Crash semantics: :meth:`kill` drops the server and every connection
 without a final checkpoint (the crash the recovery tests simulate);
 graceful ``shutdown`` (op or :meth:`stop`) writes the journal first.
+Either way the WAL (``journal.py``) already holds every acknowledged
+op, so even a kill loses nothing.
 """
 from __future__ import annotations
 
 import asyncio
-from typing import Optional, Set
+import time
+from typing import Dict, Optional, Set
 
 from . import protocol
 from .core import AllocatorCore, SchedulerConfig
+
+
+class _Subscriber:
+    """One event-stream consumer: its bounded queue and pump task."""
+
+    __slots__ = ("writer", "queue", "task", "lagged")
+
+    def __init__(self, writer: asyncio.StreamWriter, depth: int):
+        self.writer = writer
+        self.queue: "asyncio.Queue[dict]" = asyncio.Queue(
+            maxsize=max(1, depth))
+        self.task: Optional[asyncio.Task] = None
+        self.lagged = False
 
 
 class SchedulerDaemon:
@@ -35,11 +61,15 @@ class SchedulerDaemon:
         self.core = (AllocatorCore.recover(config, mask_client)
                      if recover else AllocatorCore(config, mask_client))
         self._server: Optional[asyncio.base_events.Server] = None
-        self._subscribers: Set[asyncio.StreamWriter] = set()
+        self._subscribers: Dict[asyncio.StreamWriter, _Subscriber] = {}
         self._writers: Set[asyncio.StreamWriter] = set()
         self._closing = asyncio.Event()
         self._killed = False
         self.address: Optional[tuple] = None
+        # Liveness: client id -> monotonic lease deadline.
+        self._leases: Dict[str, float] = {}
+        self._lease_task: Optional[asyncio.Task] = None
+        self.subscribers_dropped = 0
 
     # -- lifecycle -----------------------------------------------------
     async def start(self) -> tuple:
@@ -52,6 +82,9 @@ class SchedulerDaemon:
                 and hasattr(self.mask_client, "register"):
             # The daemon is one more live client of the shared broker.
             self.mask_client.register()
+        if self.config.lease_timeout:
+            self._lease_task = asyncio.get_running_loop().create_task(
+                self._lease_loop())
         return self.address
 
     async def wait_closed(self) -> None:
@@ -60,6 +93,11 @@ class SchedulerDaemon:
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
+        if self._lease_task is not None:
+            self._lease_task.cancel()
+        for sub in list(self._subscribers.values()):
+            if sub.task is not None:
+                sub.task.cancel()
         for w in list(self._writers):
             w.close()
         if self.mask_client is not None \
@@ -74,9 +112,35 @@ class SchedulerDaemon:
 
     def kill(self) -> None:
         """Simulated crash: stop serving with NO final checkpoint —
-        recovery must work from the last periodic snapshot alone."""
+        recovery must work from the last snapshot + the WAL tail."""
         self._killed = True
         self._closing.set()
+
+    # -- liveness ------------------------------------------------------
+    def _touch_lease(self, msg: dict) -> None:
+        cid = msg.get("client")
+        if cid is not None and self.config.lease_timeout:
+            self._leases[str(cid)] = (time.monotonic()
+                                      + self.config.lease_timeout)
+
+    async def _lease_loop(self) -> None:
+        """Expire clients that stopped sending. The expiry op is
+        applied through the core exactly like a wire request — it
+        journals the resolved action, so a recovered daemon replays
+        the identical disposition."""
+        period = max(0.01, self.config.lease_timeout / 4.0)
+        while not self._closing.is_set():
+            await asyncio.sleep(period)
+            now = time.monotonic()
+            expired = [cid for cid, dl in self._leases.items()
+                       if dl <= now]
+            for cid in expired:
+                self._leases.pop(cid, None)
+                reply, events = self.core.apply(
+                    {"op": "lease_expire", "client": cid,
+                     "action": self.config.lease_policy})
+                if events:
+                    self._broadcast(events)
 
     # -- connection handling -------------------------------------------
     async def _handle(self, reader: asyncio.StreamReader,
@@ -101,41 +165,86 @@ class SchedulerDaemon:
             pass
         finally:
             self._writers.discard(writer)
-            self._subscribers.discard(writer)
+            self._drop_subscriber(writer, lagged=False)
             writer.close()
 
     async def _dispatch(self, msg: dict,
                         writer: asyncio.StreamWriter) -> None:
         op = msg.get("op")
+        self._touch_lease(msg)
         if op == "subscribe":
-            self._subscribers.add(writer)
+            self._add_subscriber(writer)
             reply, events = {"ok": True, "subscribed": True}, []
         elif op == "shutdown":
             reply, events = {"ok": True, "shutdown": True}, []
         else:
             reply, events = self.core.apply(msg)
+            if op == "status" and reply.get("ok"):
+                # Daemon-side liveness/backpressure counters piggyback
+                # on the core's snapshot.
+                reply["leases"] = len(self._leases)
+                reply["subscribers"] = len(self._subscribers)
+                reply["subscribers_dropped"] = self.subscribers_dropped
         if "seq" in msg:
             reply["seq"] = msg["seq"]
         writer.write(protocol.encode(reply))
         await writer.drain()
         if events:
-            await self._broadcast(events)
+            self._broadcast(events)
         if op == "shutdown":
             self.stop()
 
-    async def _broadcast(self, events) -> None:
-        dead = []
-        # Snapshot: a connection may subscribe while we await a drain.
-        for sub in list(self._subscribers):
+    # -- subscribers (bounded queues, lagged-drop) ---------------------
+    def _add_subscriber(self, writer: asyncio.StreamWriter) -> None:
+        if writer in self._subscribers:
+            return
+        sub = _Subscriber(writer, self.config.subscriber_queue)
+        sub.task = asyncio.get_running_loop().create_task(
+            self._pump(sub))
+        self._subscribers[writer] = sub
+
+    async def _pump(self, sub: _Subscriber) -> None:
+        """Per-subscriber writer: drains the bounded queue to the
+        socket. Slow consumers exert backpressure *here* (the drain
+        blocks this task only), never on the dispatch path."""
+        try:
+            while True:
+                ev = await sub.queue.get()
+                sub.writer.write(protocol.encode(ev))
+                await sub.writer.drain()
+        except (ConnectionResetError, RuntimeError, OSError,
+                asyncio.CancelledError):
+            pass
+
+    def _offer(self, sub: _Subscriber, events) -> bool:
+        """Enqueue events for one subscriber without ever blocking
+        dispatch. Returns False when its queue overflowed — the
+        subscriber is lagged and must be dropped (the alternative is
+        unbounded buffering for a consumer that stopped reading)."""
+        for ev in events:
             try:
-                for ev in events:
-                    sub.write(protocol.encode(ev))
-                await sub.drain()
-            except (ConnectionResetError, RuntimeError):
-                dead.append(sub)
-        for sub in dead:
-            self._subscribers.discard(sub)
-            self._writers.discard(sub)
+                sub.queue.put_nowait(ev)
+            except asyncio.QueueFull:
+                sub.lagged = True
+                return False
+        return True
+
+    def _broadcast(self, events) -> None:
+        for writer, sub in list(self._subscribers.items()):
+            if not self._offer(sub, events):
+                self._drop_subscriber(writer, lagged=True)
+
+    def _drop_subscriber(self, writer: asyncio.StreamWriter,
+                         lagged: bool) -> None:
+        sub = self._subscribers.pop(writer, None)
+        if sub is None:
+            return
+        if lagged:
+            self.subscribers_dropped += 1
+            if sub.task is not None:
+                sub.task.cancel()
+            self._writers.discard(writer)
+            writer.close()
 
     # -- convenience ---------------------------------------------------
     async def serve_forever(self) -> None:

@@ -13,6 +13,24 @@ stream:
     models-on-the-move (SNIPPETS.md §1), with JSON lines instead of
     ``SETUP-``-prefixed byte blobs.
 
+Resilience fields (PR 9) — every request may additionally carry:
+
+  ``request_id``      client-generated idempotency token (the stock
+                      client sends ``"<client-id>:<seq>"``). The
+                      daemon remembers the reply to every *journaled*
+                      op per request_id (bounded LRU, persisted via
+                      the journal), so a retry after a reconnect — or
+                      even across a daemon crash + recovery — returns
+                      the original reply instead of double-applying.
+                      Stateless replies (status, REJECTED, errors) are
+                      recomputed, which is safe by construction.
+  ``client``          stable client identity. Carrying it makes this
+                      client the *lease holder* of the jobs it
+                      submits/places; with ``lease_timeout`` set, the
+                      daemon expires clients that stop sending (any
+                      request renews the lease) and requeues or
+                      releases their jobs per ``lease_policy``.
+
 Request ops (``{"op": ..., "seq": n, ...fields}``):
 
   ``submit``          shape=[a,b,c], optional job_id → outcome
@@ -33,9 +51,20 @@ Request ops (``{"op": ..., "seq": n, ...fields}``):
                       replanned (each → ``migrated``/``preempted``)
   ``repair``          kind, targets — undo a fault (no-op for targets
                       that never failed) and drain the queue
+  ``heartbeat``       lease renewal (any request renews too; this one
+                      exists so an idle client can stay alive) →
+                      echoes the daemon's lease_timeout/lease_policy
+  ``lease_expire``    client, action=requeue|release — disposition a
+                      dead client's jobs now (normally issued by the
+                      daemon's own expiry loop, journaled with the
+                      resolved action so replay is policy-independent)
   ``status``          → policy/occupancy/queue snapshot + state digest
+                      + resilience counters (dedup/lease/WAL)
   ``events``? no      (events are pushed, never polled)
   ``subscribe``       register this connection for pushed events
+                      (bounded per-subscriber queue: a subscriber that
+                      stops reading is marked lagged and dropped,
+                      never buffered unboundedly)
   ``sync``            force a checkpoint write now
   ``shutdown``        graceful stop (final checkpoint, then close)
 
@@ -68,6 +97,9 @@ EV_FAULT = "FAULT"
 EV_REPAIR = "REPAIR"
 EV_PREEMPT = "PREEMPT"
 EV_MIGRATE = "MIGRATE"
+# Liveness: a dead client's lease lapsed; one event per owned job
+# with its disposition (action=requeue|release).
+EV_LEASE = "LEASE_EXPIRED"
 
 
 def _jsonable(obj: Any):

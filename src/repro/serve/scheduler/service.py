@@ -52,7 +52,15 @@ class Scheduler:
         if self._boot_error is not None:
             raise self._boot_error
         self._client = SchedulerClient(self.address, subscribe=True)
+        self._auto_heartbeat(self._client)
         return self
+
+    def _auto_heartbeat(self, client: SchedulerClient) -> None:
+        """With leases on, every facade-owned client heartbeats at a
+        third of the lease timeout — an idle handle must not lose its
+        jobs to the expiry loop."""
+        if self.config.lease_timeout:
+            client.start_heartbeat(self.config.lease_timeout / 3.0)
 
     def _run(self) -> None:
         import asyncio
@@ -76,12 +84,14 @@ class Scheduler:
         if self._thread is None:
             return
         if self._client is not None:
+            self._client.stop_heartbeat()
             try:
                 if crash:
                     self._client.close()
                 else:
                     self._client.shutdown()
-            except (RuntimeError, ConnectionError, OSError):
+            except (RuntimeError, ConnectionError, OSError,
+                    TimeoutError):
                 pass
             if crash:
                 self._client = None
@@ -124,7 +134,9 @@ class Scheduler:
         RemotePolicy while this handle watches events)."""
         if self.address is None:
             raise RuntimeError("scheduler not started")
-        return SchedulerClient(self.address, subscribe=subscribe)
+        client = SchedulerClient(self.address, subscribe=subscribe)
+        self._auto_heartbeat(client)
+        return client
 
     def remote_policy(self) -> RemotePolicy:
         """A PlacementPolicy adapter over a fresh connection."""

@@ -56,6 +56,35 @@ reach the broker).
 
 The broker implements the ``repro.core.maskquery`` client contract,
 so installing it is one call per policy (:func:`install_mask_client`).
+
+Containment & failover (PR 9): the broker tolerates the two ways a
+fleet dies in practice.
+
+  * **Dead steppers** — a registered simulator thread that exits
+    without deactivating (killed, or a non-Python crash) would
+    otherwise pin the live count forever: quorum never forms and the
+    survivors hang. When ``register`` is given the thread handle (the
+    :class:`Fleet` driver always passes it), parked waiters poll on a
+    bounded watchdog tick, reap threads that are no longer alive
+    (``steppers_reaped``), shrink the live quorum, and deliver an
+    exception to any request the dead thread left parked — a killed
+    stepper can delay a flush by at most the watchdog tick, never
+    hang it.
+  * **Dying engines** — an engine call that raises is retried once
+    (``engine_retries``); if it raises again the broker fails over
+    down the ``pallas → jax → numpy`` chain
+    (:data:`repro.core.engineconfig.FAILOVER_CHAIN`), adopting the
+    first backend that answers (``engine_failovers`` /
+    ``failover_engine``) and resetting its compiled-shape bucket
+    state. The first few post-failover multibox flushes are
+    canary-checked against the host numpy oracle
+    (``canary_checks``/``canary_mismatches``) — answers are a pure
+    function of the inputs, so any mismatch is a real defect, not
+    noise. Failover applies only to registry-named engines; a custom
+    engine *instance* has no registry identity, so its errors
+    propagate to the waiters unchanged (the historical contract).
+    :meth:`QueryBroker.inject_engine_faults` arms synthetic failures
+    for drills and tests.
 """
 from __future__ import annotations
 
@@ -90,6 +119,15 @@ _PAD_BOX: Box = (1, 1, 1)  # K filler when a bucket's table is empty
 # zero pad-slot arithmetic.
 _STABLE_FLUSHES = 3
 
+# Bounded wait tick (seconds) for parked waiters while stepper threads
+# are being watched: the reap latency for a dead stepper, and the
+# upper bound on how long one can stall a flush.
+_WATCHDOG_TICK = 0.05
+
+# Post-failover parity canary: how many multibox flushes on the
+# adopted engine are cross-checked against the host numpy oracle.
+_CANARY_FLUSHES = 3
+
 
 @dataclass
 class BrokerStats:
@@ -118,6 +156,13 @@ class BrokerStats:
     fc_inline: int = 0         # answered inline on the host engine
     fc_cache_hits: int = 0     # answered from the content cache
     fc_cache_misses: int = 0   # parked for a batched round
+    # -- containment & failover (PR 9) --
+    steppers_reaped: int = 0   # dead stepper threads reaped
+    engine_retries: int = 0    # engine calls retried after an error
+    engine_failovers: int = 0  # chain steps taken (engine adopted)
+    canary_checks: int = 0     # post-failover flushes parity-checked
+    canary_mismatches: int = 0  # canary disagreed with the host oracle
+    failover_engine: Optional[str] = None  # engine currently adopted
 
     def record_call(self, n_requests: int, n_grids: int,
                     n_padded: int = 0) -> None:
@@ -143,7 +188,8 @@ class BrokerStats:
 
 
 class _Request:
-    __slots__ = ("kind", "occ", "boxes", "result", "error", "done", "t")
+    __slots__ = ("kind", "occ", "boxes", "result", "error", "done", "t",
+                 "owner")
 
     def __init__(self, kind: str, occ: np.ndarray,
                  boxes: Optional[Tuple[Box, ...]] = None):
@@ -154,6 +200,9 @@ class _Request:
         self.error: Optional[BaseException] = None
         self.done = threading.Event()
         self.t = time.monotonic()
+        # The submitting thread: lets the watchdog error out requests
+        # a dead stepper left parked.
+        self.owner = threading.current_thread()
 
 
 class _Bucket:
@@ -217,11 +266,21 @@ class QueryBroker(MaskQueryClient):
     def __init__(self, engine=None, quorum: Optional[float] = 1.0,
                  timeout: Optional[float] = None, pad_b="auto",
                  max_inflight: int = 2):
+        from repro.core.engineconfig import (canonical_engine_name,
+                                             default_engine_name)
         from repro.kernels.fitmask import ops
-        self.engine = (engine if hasattr(engine, "multibox")
-                       else ops.get_engine(engine))
+        if hasattr(engine, "multibox"):
+            # Custom instance: no registry identity — never failed over.
+            self.engine = engine
+            self.engine_name: Optional[str] = None
+        else:
+            self.engine_name = (canonical_engine_name(engine)
+                                if engine is not None
+                                else default_engine_name())
+            self.engine = ops.get_engine(engine)
+        self._pad_auto = pad_b == "auto"
         self.pad_b = (bool(getattr(self.engine, "pads_shapes", False))
-                      if pad_b == "auto" else bool(pad_b))
+                      if self._pad_auto else bool(pad_b))
         self.quorum = quorum
         self.timeout = timeout
         self.max_inflight = max(1, int(max_inflight))
@@ -230,8 +289,6 @@ class QueryBroker(MaskQueryClient):
         # toruses can pick lazy (host) vs prefetch-all-seen (compiled)
         # mask strategies without reaching through the broker.
         self.host_free = self._host_free
-        self._bucketed_fn = getattr(self.engine, "multibox_bucketed",
-                                    None)
         # With a hint (the fleet sets its simulator count), batches at
         # or below it pad exactly to it: single-grid-per-sim rounds —
         # the whole static-torus side — then share ONE compiled shape.
@@ -244,23 +301,56 @@ class QueryBroker(MaskQueryClient):
         self._inflight = 0
         self._buckets: Dict[Tuple[int, ...], _Bucket] = {}
         self._fc_cache: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        # Containment & failover state (PR 9).
+        self._watched: List[threading.Thread] = []  # stepper threads
+        self._faults_left = 0        # armed synthetic engine failures
+        self._canary_left = 0        # post-failover parity checks due
         self.stats = BrokerStats()
 
     # -- simulator lifecycle ------------------------------------------
-    def register(self) -> None:
-        """Declare one more live simulator (call before it starts)."""
+    def register(self, thread: Optional[threading.Thread] = None) -> None:
+        """Declare one more live simulator (call before it starts).
+        With ``thread``, the watchdog tracks it: if it dies without
+        deactivating, parked waiters reap it, shrink the quorum and
+        error out any requests it left behind."""
         with self._lock:
             self._active += 1
+            if thread is not None:
+                self._watched.append(thread)
 
     def deactivate(self) -> None:
         """A simulator finished (or died): it submits no further
         queries. If the survivors' round is now ready (all parked, or
         quorum/deadline met), flush it — nobody else may trigger it."""
+        cur = threading.current_thread()
         with self._lock:
             self._active -= 1
+            # A clean exit from a watched thread unwatches it — the
+            # watchdog must not double-decrement when it later dies.
+            if cur in self._watched:
+                self._watched.remove(cur)
             batch = self._take_round_locked(deadline_ok=True)
         if batch is not None:
             self._lead(batch)
+
+    def _reap_locked(self) -> bool:
+        """Reap watched threads that died without deactivating: shrink
+        the live count (so quorum/all-parked reflect survivors only)
+        and deliver an exception to any request they left parked.
+        Returns True when anything was reaped."""
+        dead = [t for t in self._watched
+                if t.ident is not None and not t.is_alive()]
+        for t in dead:
+            self._watched.remove(t)
+            self._active -= 1
+            self.stats.steppers_reaped += 1
+            for r in [r for r in self._pending if r.owner is t]:
+                self._pending.remove(r)
+                r.error = RuntimeError(
+                    f"stepper thread {t.name!r} died with this query "
+                    "parked")
+                r.done.set()
+        return bool(dead)
 
     # -- MaskQueryClient contract -------------------------------------
     def multibox(self, occ, boxes: Sequence[Box]) -> np.ndarray:
@@ -312,10 +402,13 @@ class QueryBroker(MaskQueryClient):
             self._lead(batch)
         # Park until answered; on each deadline tick, check whether a
         # waiting round (possibly ours, possibly a successor round) is
-        # now flushable and lead it if so.
-        tick = self.timeout
-        while not req.done.wait(tick):
+        # now flushable and lead it if so. With watched stepper threads
+        # the tick is bounded by the watchdog period, so a killed
+        # stepper delays a flush by at most _WATCHDOG_TICK — it can
+        # never hang the broker.
+        while not req.done.wait(self._wait_tick()):
             with self._lock:
+                self._reap_locked()
                 batch = self._take_round_locked(deadline_ok=True)
             if batch is not None:
                 self._lead(batch)
@@ -323,6 +416,15 @@ class QueryBroker(MaskQueryClient):
             raise req.error
         assert req.result is not None
         return req.result
+
+    def _wait_tick(self) -> Optional[float]:
+        """Parked-waiter wakeup period: the flush deadline, bounded by
+        the watchdog tick while stepper threads are being watched
+        (``None`` — wait forever — only when neither applies)."""
+        if self._watched:
+            return (_WATCHDOG_TICK if self.timeout is None
+                    else min(self.timeout, _WATCHDOG_TICK))
+        return self.timeout
 
     # -- continuous scheduling ----------------------------------------
     def _take_round_locked(self,
@@ -461,21 +563,116 @@ class QueryBroker(MaskQueryClient):
             self.stats.k_needed += len(needed)
         return table, kidx
 
-    def _call_bucketed(self, occ: np.ndarray, boxes: Tuple[Box, ...]
-                       ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-        """One engine pass answering planes (+ free counts when the
-        engine has a fused program)."""
-        if self._bucketed_fn is not None:
-            planes, free = self._bucketed_fn(occ, boxes)
-            return np.asarray(planes), np.asarray(free)
-        return np.asarray(self.engine.multibox(occ, boxes)), None
+    # -- engine dispatch: retry, failover, canary ---------------------
+    def inject_engine_faults(self, n: int) -> None:
+        """Arm ``n`` synthetic engine failures (chaos drills / tests):
+        the next ``n`` raw engine invocations raise. Two faults walk
+        the full retry-then-failover path; more walk further down the
+        chain."""
+        with self._lock:
+            self._faults_left = int(n)
+
+    def _dispatch_engine(self, kind: str, occ: np.ndarray,
+                         boxes: Optional[Tuple[Box, ...]] = None):
+        """One raw invocation on the *current* engine — resolved per
+        call, because failover swaps the engine underneath inflight
+        flushes. Armed synthetic faults fire here, upstream of the
+        real engine, so they exercise the identical recovery path."""
+        with self._lock:
+            if self._faults_left > 0:
+                self._faults_left -= 1
+                raise RuntimeError("injected engine fault")
+        if kind == "multibox":
+            fn = getattr(self.engine, "multibox_bucketed", None)
+            if fn is not None:
+                planes, free = fn(occ, boxes)
+                return np.asarray(planes), np.asarray(free)
+            return np.asarray(self.engine.multibox(occ, boxes)), None
+        return np.asarray(self.engine.free_counts(occ)).astype(np.int64)
+
+    def _failover_names(self) -> Tuple[str, ...]:
+        if self.engine_name is None:
+            return ()  # custom instance: errors propagate unchanged
+        from repro.core.engineconfig import failover_candidates
+        return failover_candidates(self.engine_name)
+
+    def _adopt_engine(self, name: str) -> bool:
+        """Switch to ``name`` after the current engine failed its
+        retry. Compiled-shape bucket state is engine-specific and is
+        dropped; the pad policy re-derives when it was ``"auto"``.
+        Returns False when the backend cannot even be constructed
+        (runtime not installed) — the chain just moves on."""
+        from repro.kernels.fitmask import ops
+        try:
+            eng = ops.get_engine(name)
+        except Exception:  # noqa: BLE001 — any backend boot failure
+            return False
+        with self._lock:
+            self.engine = eng
+            self.engine_name = name
+            self._host_free = bool(getattr(eng, "host_free", False))
+            self.host_free = self._host_free
+            if self._pad_auto:
+                self.pad_b = bool(getattr(eng, "pads_shapes", False))
+            self._buckets = {}
+            self._canary_left = _CANARY_FLUSHES
+            self.stats.engine_failovers += 1
+            self.stats.failover_engine = name
+        return True
+
+    def _engine_call(self, kind: str, occ: np.ndarray,
+                     boxes: Optional[Tuple[Box, ...]] = None):
+        """Engine invocation with containment: retry once on the same
+        engine, then fail over down the chain; raises the last error
+        only when the numpy floor itself failed (or the engine has no
+        registry identity)."""
+        last: Optional[BaseException] = None
+        for attempt in range(2):
+            try:
+                return self._dispatch_engine(kind, occ, boxes)
+            except Exception as e:  # noqa: BLE001 — contained below
+                last = e
+                if attempt == 0:
+                    with self._lock:
+                        self.stats.engine_retries += 1
+        for name in self._failover_names():
+            if not self._adopt_engine(name):
+                continue
+            try:
+                return self._dispatch_engine(kind, occ, boxes)
+            except Exception as e:  # noqa: BLE001 — keep walking
+                last = e
+        assert last is not None
+        raise last
+
+    def _maybe_canary(self, occ: np.ndarray, boxes: Tuple[Box, ...],
+                      planes: np.ndarray) -> None:
+        """Parity-check the first few post-failover flushes against
+        the host numpy oracle. Engines agree on the fit *mask* (the
+        nonzero pattern), so that is what is compared; any mismatch is
+        a real defect — answers are pure functions of the inputs."""
+        take = False
+        with self._lock:
+            if self._canary_left > 0 and self.engine_name != "numpy":
+                self._canary_left -= 1
+                take = True
+        if not take:
+            return
+        from repro.kernels.fitmask import ops
+        ref = np.asarray(ops.get_engine("numpy").multibox(occ, boxes))
+        ok = np.array_equal(np.asarray(planes) != 0, ref != 0)
+        with self._lock:
+            self.stats.canary_checks += 1
+            if not ok:
+                self.stats.canary_mismatches += 1
 
     def _answer_multibox(self, cell: Tuple[int, ...],
                          group: List[_Request]) -> None:
         union = tuple(sorted({b for r in group for b in r.boxes}))
         boxes, kidx = self._boxes_for(cell, union)
         occ, real_b, pad = self._stack(cell, group)
-        planes, free = self._call_bucketed(occ, boxes)
+        planes, free = self._engine_call("multibox", occ, boxes)
+        self._maybe_canary(occ, boxes, planes)
         with self._lock:
             self.stats.record_call(len(group), real_b, pad)
         lo = 0
@@ -505,7 +702,7 @@ class QueryBroker(MaskQueryClient):
     def _answer_free_counts(self, cell: Tuple[int, ...],
                             group: List[_Request]) -> None:
         occ, real_b, pad = self._stack(cell, group)
-        out = np.asarray(self.engine.free_counts(occ)).astype(np.int64)
+        out = self._engine_call("free_counts", occ)
         with self._lock:
             self.stats.record_call(len(group), real_b, pad)
         lo = 0
@@ -588,7 +785,10 @@ class Fleet:
             # park behind the live flush and drain as one batch.
             # Compiled engines overlap two (dispatch releases the GIL).
             max_inflight = 1 if host else 2
-        self.broker = QueryBroker(eng, quorum=quorum, timeout=timeout,
+        # Pass the *spec* (name/None/instance), not the resolved
+        # singleton: a registry name gives the broker the identity the
+        # failover chain keys on; an instance stays failover-exempt.
+        self.broker = QueryBroker(engine, quorum=quorum, timeout=timeout,
                                   max_inflight=max_inflight)
 
     def run(self, units: Sequence[Callable[[QueryBroker], Any]]) -> List[Any]:
@@ -604,12 +804,15 @@ class Fleet:
             finally:
                 broker.deactivate()
 
-        for _ in units:
-            broker.register()
-        if broker.pad_hint is None:
-            broker.pad_hint = len(units)
         threads = [threading.Thread(target=work, args=(i, u), daemon=True)
                    for i, u in enumerate(units)]
+        # Register with the thread handles *before* any unit starts:
+        # the first round coalesces across the whole fleet, and the
+        # watchdog can reap a unit that dies without deactivating.
+        for t in threads:
+            broker.register(thread=t)
+        if broker.pad_hint is None:
+            broker.pad_hint = len(units)
         for t in threads:
             t.start()
         for t in threads:

@@ -85,6 +85,20 @@ def _fault_seed(seed: int, name: str) -> int:
     return (int(seed) * 1000003 + zlib.crc32(name.encode())) % (2 ** 31)
 
 
+def fault_schedule(scenario, model, jobs, seed: int) -> list:
+    """The deterministic fault list for one (scenario, seed) against
+    ``model`` (a cluster/torus): what :func:`run_scenario` injects, and
+    what the eval runner injects when an :class:`~repro.eval.runner.
+    EvalTask` carries a ``scenario`` — same seed derivation, so a
+    paper-eval record and a ``run_scenario`` record of the same cell
+    see byte-identical fault streams."""
+    sc: Scenario = (SCENARIOS[scenario] if isinstance(scenario, str)
+                    else scenario)
+    horizon = max((j.arrival for j in jobs), default=0.0)
+    cfg = FaultConfig(seed=_fault_seed(seed, sc.name), **sc.fault_kw)
+    return FaultGenerator(cfg).generate(model, horizon)
+
+
 def run_scenario(scenario, policy: str = "rfold",
                  policy_kw: Optional[dict] = None,
                  num_jobs: int = 120, seed: int = 0,
@@ -108,10 +122,7 @@ def run_scenario(scenario, policy: str = "rfold",
     injector_model = getattr(pol, "cluster", None)
     if injector_model is None:
         injector_model = pol.torus
-    horizon = max(j.arrival for j in jobs) if jobs else 0.0
-    fault_cfg = FaultConfig(seed=_fault_seed(seed, sc.name),
-                            **sc.fault_kw)
-    faults = FaultGenerator(fault_cfg).generate(injector_model, horizon)
+    faults = fault_schedule(sc, injector_model, jobs, seed)
     observer = ChaosObserver()
     sim = Simulator(pol, jobs, faults=faults, observer=observer,
                     **sc.sim_kw)

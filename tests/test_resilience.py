@@ -1,0 +1,532 @@
+"""Resilience tests (PR 9): WAL framing + torn-tail truncation,
+checkpoint-shard corruption, idempotent retries across daemon crashes,
+lease expiry dispositions, SIGKILL crash-loop recovery, broker stepper
+watchdog, and the engine failover chain."""
+import os
+import random
+import signal
+import struct
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import (Scheduler, SchedulerClient, SchedulerConfig,
+                       failover_candidates)
+from repro.eval.runner import record_crc, shard_dir, verify_record
+from repro.kernels.fitmask import ops
+from repro.serve.scheduler import PLACED, protocol
+from repro.serve.scheduler.journal import (MAGIC, JournalWriter,
+                                           recover_journal)
+from repro.sim.fleet import QueryBroker
+
+SMALL = dict(num_xpus=64, cube_n=4)      # one 4^3 cube: trivially full
+MEDIUM = dict(num_xpus=512, cube_n=4)    # 8 cubes
+
+
+# ------------------------------------------------------------ WAL unit
+def _write_wal(path, records):
+    w = JournalWriter(path, fsync=False)
+    for rec in records:
+        w.append(rec)
+    w.close()
+
+
+def test_wal_roundtrip(tmp_path):
+    path = str(tmp_path / "a.wal")
+    recs = [{"op": "submit", "i": i} for i in range(5)]
+    _write_wal(path, recs)
+    got, truncated = recover_journal(path)
+    assert got == recs and not truncated
+
+
+def test_wal_missing_file_is_empty_not_error(tmp_path):
+    assert recover_journal(str(tmp_path / "never.wal")) == ([], False)
+
+
+def test_wal_torn_tail_truncated_and_repaired(tmp_path):
+    path = str(tmp_path / "a.wal")
+    recs = [{"op": "submit", "i": i} for i in range(3)]
+    _write_wal(path, recs)
+    size = os.path.getsize(path)
+    with open(path, "ab") as f:   # SIGKILL mid-append: half a frame
+        f.write(struct.pack("<II", 999, 0) + b'{"op": "half')
+    got, truncated = recover_journal(path)
+    assert got == recs and truncated
+    # Repaired back to the last good offset: appends are well-formed.
+    assert os.path.getsize(path) == size
+    w = JournalWriter(path, fsync=False)
+    w.append({"op": "done"})
+    w.close()
+    assert recover_journal(path) == (recs + [{"op": "done"}], False)
+
+
+def test_wal_bitflip_stops_at_corrupt_record(tmp_path):
+    path = str(tmp_path / "a.wal")
+    recs = [{"op": "submit", "i": i} for i in range(5)]
+    _write_wal(path, recs)
+    data = bytearray(open(path, "rb").read())
+    # Walk the frames to the payload of record 2 and flip one bit.
+    off = len(MAGIC)
+    for _ in range(2):
+        length, _crc = struct.unpack_from("<II", data, off)
+        off += 8 + length
+    data[off + 8 + 2] ^= 0x40
+    with open(path, "wb") as f:
+        f.write(data)
+    got, truncated = recover_journal(path)
+    assert got == recs[:2] and truncated
+
+
+def test_wal_foreign_header_ignored_wholesale(tmp_path):
+    path = str(tmp_path / "a.wal")
+    with open(path, "wb") as f:
+        f.write(b"GARBAGE!" + b"\x01" * 32)
+    assert recover_journal(path) == ([], True)
+    # Repair leaves a well-formed empty journal behind.
+    assert recover_journal(path) == ([], False)
+
+
+# ------------------------------------------- checkpoint-shard bit-rot
+def test_eval_checkpoint_crc_detects_bitflip():
+    rec = {"fingerprint": "x", "metrics": {"jcr": 0.5}}
+    rec["_crc32"] = record_crc(rec)
+    assert verify_record(rec)
+    rec["metrics"]["jcr"] = 0.6
+    assert not verify_record(rec)
+    rec["_crc32"] = "not-a-crc"
+    assert not verify_record(rec)
+
+
+def _daemon_cfg(tmp_path, **kw):
+    kw.setdefault("checkpoint_every", 1000)   # keep ops in the WAL
+    return SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                           checkpoint_dir=str(tmp_path / "ckpt"), **kw)
+
+
+def _snapshot_path(cfg):
+    return os.path.join(shard_dir(cfg.checkpoint_dir, cfg.fingerprint()),
+                        cfg.checkpoint_name())
+
+
+@pytest.mark.parametrize("corrupt", ["bitflip", "truncate"])
+def test_corrupt_snapshot_never_replays(tmp_path, corrupt):
+    cfg = _daemon_cfg(tmp_path, checkpoint_every=1)
+    with Scheduler(cfg) as s:
+        s.submit((4, 4, 4))
+        assert s.status()["journal_ops"] == 1
+    path = _snapshot_path(cfg)
+    data = bytearray(open(path, "rb").read())
+    if corrupt == "bitflip":
+        data[len(data) // 2] ^= 0xFF
+    else:
+        data = data[:len(data) // 2]
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    # A corrupt shard must start fresh (never crash, never half-replay).
+    s2 = Scheduler(cfg).start()
+    st = s2.status()
+    s2.kill()
+    assert st["journal_ops"] == 0 and st["allocated"] == 0
+
+
+def test_daemon_truncated_wal_recovers_acked_prefix(tmp_path):
+    cfg = _daemon_cfg(tmp_path)
+    s = Scheduler(cfg).start()
+    for dims in [(4, 4, 4), (2, 4, 8), (4, 4, 8)]:
+        s.submit(dims)
+    n_ops = s.status()["journal_ops"]
+    s.kill()   # crash: recovery is WAL-only (no final snapshot)
+    core_like = cfg.checkpoint_name() + ".wal"
+    wal = os.path.join(shard_dir(cfg.checkpoint_dir, cfg.fingerprint()),
+                       core_like)
+    with open(wal, "rb") as f:
+        data = f.read()
+    with open(wal, "wb") as f:   # tear the last record mid-payload
+        f.write(data[:-5])
+    s2 = Scheduler(cfg).start()
+    st = s2.status()
+    s2.kill()
+    assert st["journal_ops"] == n_ops - 1
+    assert st["resilience"]["wal_truncated"] == 1
+    assert st["resilience"]["wal_tail_ops"] == n_ops - 1
+    # The recovered state is byte-identical to a run that only ever
+    # saw the surviving prefix.
+    cfg2 = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                           checkpoint_dir=str(tmp_path / "control"))
+    s3 = Scheduler(cfg2).start()
+    for dims in [(4, 4, 4), (2, 4, 8)]:
+        s3.submit(dims)
+    digest = s3.status()["state_digest"]
+    s3.kill()
+    assert st["state_digest"] == digest
+
+
+# --------------------------------------------------- idempotent retry
+class _Raw:
+    """Wire driver with a fixed client id and explicit request_ids, so
+    a byte-identical resend is the genuine retry path."""
+
+    def __init__(self, address, cid="raw"):
+        self._c = SchedulerClient(address, client_id=cid, max_retries=0)
+        self._cid = cid
+
+    def send(self, i, msg):
+        wire = dict(msg, seq=i, client=self._cid,
+                    request_id=f"{self._cid}:{i}")
+        self._c._sock.sendall(protocol.encode(wire))
+        return self._c._await_reply(i, 30.0)
+
+    def close(self):
+        self._c.close()
+
+
+def test_retry_same_request_id_applied_once():
+    s = Scheduler(SchedulerConfig(policy="rfold",
+                                  policy_kw=MEDIUM)).start()
+    c = _Raw(s.address)
+    try:
+        r1 = c.send(0, {"op": "submit", "shape": [4, 4, 4]})
+        assert r1["outcome"] == PLACED
+        r2 = c.send(0, {"op": "submit", "shape": [4, 4, 4]})
+        assert r2["job_id"] == r1["job_id"]
+        st = c.send(1, {"op": "status"})
+        assert st["allocated"] == 1   # applied exactly once
+        assert st["resilience"]["dedup_hits"] >= 1
+    finally:
+        c.close()
+        s.stop()
+
+
+def test_dedup_cache_survives_crash(tmp_path):
+    cfg = _daemon_cfg(tmp_path)
+    s = Scheduler(cfg).start()
+    c = _Raw(s.address)
+    r1 = c.send(0, {"op": "submit", "shape": [4, 4, 4]})
+    c.close()
+    s.kill()
+    # Replay repopulates the dedup cache from the journaled rids: the
+    # retry a reconnecting client sends must still be exactly-once.
+    s2 = Scheduler(cfg).start()
+    c2 = _Raw(s2.address)
+    try:
+        before = c2.send(1, {"op": "status"})
+        r2 = c2.send(0, {"op": "submit", "shape": [4, 4, 4]})
+        after = c2.send(2, {"op": "status"})
+        assert r2["job_id"] == r1["job_id"]
+        assert after["state_digest"] == before["state_digest"]
+        assert after["resilience"]["dedup_hits"] >= 1
+    finally:
+        c2.close()
+        s2.stop()
+
+
+# --------------------------------------------------------- liveness
+def _await_expiry(s, deadline=10.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        st = s.status()
+        if st["resilience"]["lease_expiries"] >= 1:
+            return st
+        time.sleep(0.05)
+    raise AssertionError("lease never expired")
+
+
+def test_lease_expiry_requeues_dead_clients_jobs():
+    cfg = SchedulerConfig(policy="rfold", policy_kw=SMALL,
+                          lease_timeout=0.3, lease_policy="requeue")
+    s = Scheduler(cfg).start()
+    try:
+        c = _Raw(s.address, cid="doomed")
+        r = c.send(0, {"op": "submit", "shape": [4, 4, 4]})
+        assert r["outcome"] == PLACED
+        c.close()   # no more heartbeats: the lease lapses
+        st = _await_expiry(s)
+        assert st["allocated"] == 0
+        assert st["queue_depth"] == 1   # work-preserving eviction
+    finally:
+        s.stop()
+
+
+def test_lease_expiry_release_frees_capacity():
+    cfg = SchedulerConfig(policy="rfold", policy_kw=SMALL,
+                          lease_timeout=0.3, lease_policy="release")
+    s = Scheduler(cfg).start()
+    try:
+        c = _Raw(s.address, cid="doomed")
+        assert c.send(0, {"op": "submit",
+                          "shape": [4, 4, 4]})["outcome"] == PLACED
+        c.close()
+        st = _await_expiry(s)
+        assert st["allocated"] == 0 and st["queue_depth"] == 0
+        assert st["busy_xpus"] == 0
+    finally:
+        s.stop()
+
+
+def test_facade_heartbeat_keeps_own_lease_alive():
+    cfg = SchedulerConfig(policy="rfold", policy_kw=SMALL,
+                          lease_timeout=0.3)
+    s = Scheduler(cfg).start()
+    try:
+        assert s.submit((4, 4, 4))["outcome"] == PLACED
+        time.sleep(1.0)   # several lease periods
+        st = s.status()
+        assert st["allocated"] == 1
+        assert st["resilience"]["lease_expiries"] == 0
+    finally:
+        s.stop()
+
+
+# ----------------------------------------------- client reconnection
+def test_client_reconnect_clears_partial_buffer():
+    s = Scheduler(SchedulerConfig(policy="rfold",
+                                  policy_kw=SMALL)).start()
+    c = SchedulerClient(s.address)
+    try:
+        assert c.status()["ok"]
+        c._buf = b'{"torn": '   # half a frame from a dying connection
+        c.connect()             # reconnect must not parse stale bytes
+        assert c._buf == b""
+        assert c.status()["num_xpus"] == 64
+    finally:
+        c.close()
+        s.stop()
+
+
+# ------------------------------------------------ SIGKILL crash loop
+_CHILD = """\
+import sys, time
+from repro.api import Scheduler, SchedulerConfig
+cfg = SchedulerConfig(policy="rfold",
+                      policy_kw=dict(num_xpus=512, cube_n=4),
+                      checkpoint_dir=sys.argv[1], checkpoint_every=3)
+s = Scheduler(cfg).start()
+for i, dims in enumerate({shapes!r}):
+    s.submit(dims)
+    print("acked", i, flush=True)
+    time.sleep(0.05)
+s.kill()
+"""
+
+_SHAPES = [(4, 4, 4), (2, 4, 8), (4, 4, 8), (2, 2, 4),
+           (4, 4, 4), (2, 4, 4), (4, 8, 4), (2, 2, 2)]
+
+
+def test_sigkill_midstream_recovers_acked_prefix(tmp_path):
+    """SIGKILL the daemon process at a seeded point mid-stream; a
+    fresh daemon on the same store must hold every acknowledged op
+    (fsync-before-ack) and match a control run over that prefix."""
+    ckpt = str(tmp_path / "ckpt")
+    script = tmp_path / "child.py"
+    script.write_text(_CHILD.format(shapes=_SHAPES))
+    kill_after = random.Random(7).randrange(2, 6)
+    src = os.path.dirname(list(repro.__path__)[0])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    proc = subprocess.Popen([sys.executable, str(script), ckpt],
+                            stdout=subprocess.PIPE, text=True, env=env)
+    acked = 0
+    try:
+        for line in proc.stdout:
+            if line.startswith("acked"):
+                acked += 1
+                if acked == kill_after:
+                    os.kill(proc.pid, signal.SIGKILL)
+                    break
+        proc.wait(timeout=60)
+    finally:
+        proc.stdout.close()
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    assert acked == kill_after
+
+    cfg = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                          checkpoint_dir=ckpt, checkpoint_every=3)
+    s2 = Scheduler(cfg).start()
+    st = s2.status()
+    s2.kill()
+    # Every acked submit is durable; at most the one op in flight at
+    # the kill may additionally have committed.
+    assert acked <= st["journal_ops"] <= acked + 1
+
+    control = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                              checkpoint_dir=str(tmp_path / "control"))
+    s3 = Scheduler(control).start()
+    for dims in _SHAPES[:st["journal_ops"]]:
+        s3.submit(dims)
+    digest = s3.status()["state_digest"]
+    s3.kill()
+    assert st["state_digest"] == digest
+
+
+# ------------------------------------------------- broker watchdog
+def _occ(rng, b, cell=(6, 6, 6)):
+    return rng.random((b,) + cell) < 0.4
+
+
+def test_dead_stepper_never_hangs_flush():
+    """A registered stepper that dies before submitting would park the
+    all-active flush trigger forever; the watchdog must reap it so the
+    surviving stepper's query still completes — bit-exactly."""
+    broker = QueryBroker("numpy")
+    rng = np.random.default_rng(0)
+    occ = _occ(rng, 3)
+    boxes = ((2, 2, 1), (3, 1, 2), (6, 6, 6))
+    ref = np.asarray(ops.get_engine("numpy").multibox(occ, boxes))
+
+    def doomed():
+        broker.register(thread=threading.current_thread())
+        raise RuntimeError("stepper crash before first query")
+
+    t_dead = threading.Thread(target=doomed, daemon=True)
+    t_dead.start()
+    t_dead.join()
+
+    results = {}
+
+    def survivor():
+        broker.register(thread=threading.current_thread())
+        try:
+            results["planes"] = broker.multibox(occ, boxes)
+        finally:
+            broker.deactivate()
+
+    t = threading.Thread(target=survivor, daemon=True)
+    t.start()
+    t.join(timeout=30)
+    assert not t.is_alive(), "flush hung behind a dead stepper"
+    np.testing.assert_array_equal(results["planes"], ref)
+    assert broker.stats.steppers_reaped == 1
+
+
+def test_stepper_dying_between_queries_shrinks_quorum():
+    """Two live steppers coalesce; after one dies mid-run the other's
+    next query must flush alone instead of waiting for the ghost."""
+    broker = QueryBroker("numpy")
+    rng = np.random.default_rng(1)
+    boxes = ((2, 2, 2),)
+    barrier = threading.Barrier(2, timeout=30)
+    out = {}
+
+    def stepper(name, rounds):
+        broker.register(thread=threading.current_thread())
+        barrier.wait()   # both registered before either's first query
+        try:
+            for r in range(rounds):
+                occ = _occ(np.random.default_rng(hash((name, r)) % 997),
+                           2)
+                out[(name, r)] = np.asarray(
+                    broker.multibox(occ, boxes)).copy()
+        finally:
+            if rounds > 1:
+                broker.deactivate()
+            # rounds == 1: die registered — the watchdog must reap us.
+
+    t1 = threading.Thread(target=stepper, args=("long", 3), daemon=True)
+    t2 = threading.Thread(target=stepper, args=("short", 1), daemon=True)
+    t1.start(), t2.start()
+    t1.join(timeout=30), t2.join(timeout=30)
+    assert not t1.is_alive() and not t2.is_alive()
+    assert broker.stats.steppers_reaped == 1
+    for (name, r), planes in out.items():
+        occ = _occ(np.random.default_rng(hash((name, r)) % 997), 2)
+        np.testing.assert_array_equal(
+            planes, np.asarray(ops.get_engine("numpy")
+                               .multibox(occ, boxes)))
+
+
+# ------------------------------------------------- engine failover
+def test_failover_candidates_chain():
+    assert failover_candidates("pallas") == ("jax", "numpy")
+    assert failover_candidates("jax") == ("numpy",)
+    assert failover_candidates("numpy") == ()
+    assert failover_candidates("no-such-engine") == ()
+
+
+def test_injected_faults_degrade_to_numpy_with_parity():
+    """Two injected faults exhaust the attempt + the single retry on
+    the jax engine; the broker must adopt numpy and answer the same
+    query bit-exactly, recording the failover in its stats."""
+    broker = QueryBroker("jax")
+    rng = np.random.default_rng(2)
+    occ = _occ(rng, 4)
+    boxes = ((2, 2, 1), (3, 1, 2))
+    ref = np.asarray(ops.get_engine("numpy").multibox(occ, boxes))
+    broker.inject_engine_faults(2)
+    np.testing.assert_array_equal(broker.multibox(occ, boxes), ref)
+    assert broker.engine_name == "numpy"
+    assert broker.stats.engine_retries == 1
+    assert broker.stats.engine_failovers == 1
+    assert broker.stats.failover_engine == "numpy"
+    # Subsequent queries run on the adopted engine without incident.
+    np.testing.assert_array_equal(
+        broker.free_counts(occ),
+        np.asarray(ops.get_engine("numpy").free_counts(occ)))
+
+
+def test_single_transient_fault_retries_in_place():
+    broker = QueryBroker("jax")
+    rng = np.random.default_rng(3)
+    occ = _occ(rng, 2)
+    boxes = ((2, 2, 2),)
+    broker.inject_engine_faults(1)
+    planes = np.asarray(broker.multibox(occ, boxes))
+    np.testing.assert_array_equal(
+        planes, np.asarray(ops.get_engine("jax").multibox(occ, boxes)))
+    assert broker.engine_name == "jax"   # retry succeeded, no failover
+    assert broker.stats.engine_retries == 1
+    assert broker.stats.engine_failovers == 0
+
+
+def test_engine_failure_mid_run_schedules_match_host_oracle():
+    """Acceptance: a compiled engine failing mid-simulation degrades
+    to numpy and the produced *schedule* is byte-identical to one
+    computed against the host oracle from the start."""
+    from repro.api import (Simulator, TraceConfig, generate_trace,
+                           make_policy)
+    from repro.sim.fleet import Fleet, install_mask_client
+
+    cfg = TraceConfig(num_jobs=40, cluster_xpus=512, size_max=512,
+                      seed=5)
+
+    def record(result):
+        return [[j.job_id, j.start, j.finish, j.dropped, j.slowdown]
+                for j in result.jobs]
+
+    ref = record(Simulator(make_policy("rfold", **MEDIUM),
+                           generate_trace(cfg)).run())
+
+    fleet = Fleet("jax")
+    fleet.broker.inject_engine_faults(2)
+
+    def unit(broker):
+        policy = make_policy("rfold", **MEDIUM)
+        install_mask_client(policy, broker)
+        return Simulator(policy, generate_trace(cfg)).run()
+
+    (res,) = fleet.run([unit])
+    assert fleet.broker.engine_name == "numpy"
+    assert fleet.broker.stats.engine_failovers == 1
+    assert record(res) == ref
+
+
+def test_custom_engine_instance_is_failover_exempt():
+    class Boom:
+        def multibox(self, occ, boxes):
+            raise RuntimeError("boom")
+
+        def free_counts(self, occ):
+            raise RuntimeError("boom")
+
+    broker = QueryBroker(Boom())
+    assert broker.engine_name is None
+    with pytest.raises(RuntimeError, match="boom"):
+        broker.free_counts(_occ(np.random.default_rng(4), 1))
+    assert broker.stats.engine_failovers == 0
