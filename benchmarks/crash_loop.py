@@ -167,8 +167,13 @@ def main(argv=None) -> None:
     ap.add_argument("--num-jobs", type=int, default=60)
     ap.add_argument("--seed", type=int, default=17)
     ap.add_argument("--kills", type=int, default=5)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller stream for CI smoke")
     ap.add_argument("--out", default="BENCH_crash_loop.json")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.num_jobs = min(args.num_jobs, 36)
+        args.kills = min(args.kills, 3)
 
     res = run_drill(args.num_jobs, args.seed, args.kills)
     print(f"# crash loop: {res['ops']} ops, kills at {res['kills']}")

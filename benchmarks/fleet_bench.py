@@ -233,6 +233,37 @@ def engine_section(sims: int, rounds: int, seed0: int,
     }
 
 
+def canary_section(seed0: int, flushes: int = 6) -> Dict:
+    """The post-failover parity canary as a first-class drill: two
+    injected faults kill the pallas engine under the broker, which
+    fails over to jax — and the first post-failover flushes are
+    parity-checked against the host numpy oracle. Zero mismatches is
+    a CI gate (the answers are pure functions of the inputs, so any
+    mismatch is a real defect, not noise)."""
+    import numpy as np
+
+    from repro.sim.fleet import QueryBroker
+
+    broker = QueryBroker("pallas")
+    broker.inject_engine_faults(2)
+    rng = np.random.default_rng(seed0)
+    boxes = ((2, 2, 2), (4, 2, 1), (3, 3, 1))
+    for _ in range(flushes):
+        occ = rng.random((2, 16, 16, 16)) < 0.35
+        broker.multibox(occ, boxes)
+    st = broker.stats
+    return {
+        "start_engine": "pallas",
+        "adopted_engine": broker.engine_name,
+        "flushes": flushes,
+        "engine_failovers": st.engine_failovers,
+        "canary_checks": st.canary_checks,
+        "canary_mismatches": st.canary_mismatches,
+        "pass": bool(st.engine_failovers >= 1 and st.canary_checks >= 1
+                     and st.canary_mismatches == 0),
+    }
+
+
 def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", type=str, default="BENCH_fleet.json")
@@ -258,6 +289,14 @@ def main(argv=None) -> Dict:
           f"seq={eng['sequential_s']}s fleet={eng['fleet_s']}s "
           f"-> {eng['speedup']}x, broker {eng['broker']}")
 
+    can = canary_section(args.seed0)
+    print(f"# canary: {can['start_engine']} -> "
+          f"{can['adopted_engine']} after "
+          f"{can['engine_failovers']} failover(s), "
+          f"{can['canary_checks']} checks "
+          f"{can['canary_mismatches']} mismatches "
+          f"(pass={can['pass']})")
+
     broker = eng["broker"]
     pass_numpy = bool(par["identical"] and par["numpy_speedup"]
                       and par["numpy_speedup"] >= NUMPY_FLOOR)
@@ -269,6 +308,7 @@ def main(argv=None) -> Dict:
         "config": {"quick": args.quick, "seed0": args.seed0},
         "parity": par,
         "engine": eng,
+        "canary": can,
         "headline": {
             "criterion": "fleet mode (the runner default) is >= "
                          f"{NUMPY_FLOOR}x sequential on the numpy host "
@@ -277,7 +317,9 @@ def main(argv=None) -> Dict:
                          f"{ENGINE_FLOOR}x faster than per-sim batch-1 "
                          f"driving on the batched ({args.engine}) "
                          "engine at CI size, broker issuing batched "
-                         "(B > 1) engine calls, answers equivalent",
+                         "(B > 1) engine calls, answers equivalent, "
+                         "AND the post-failover parity canary records "
+                         "zero mismatches",
             "numpy_speedup": par["numpy_speedup"],
             "engine_speedup": eng["speedup"],
             "batched_calls": broker["batched_calls"],
@@ -291,9 +333,12 @@ def main(argv=None) -> Dict:
             "b_pad_waste": broker["b_pad_waste"],
             "k_pad_waste": broker["k_pad_waste"],
             "fc_cache_hits": broker["fc_cache_hits"],
+            "canary_checks": can["canary_checks"],
+            "canary_mismatches": can["canary_mismatches"],
             "pass_numpy": pass_numpy,
             "pass_engine": pass_engine,
-            "pass": pass_numpy and pass_engine,
+            "pass_canary": can["pass"],
+            "pass": pass_numpy and pass_engine and can["pass"],
         },
     }
     print(f"# headline: numpy {par['numpy_speedup']}x "

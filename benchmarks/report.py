@@ -203,13 +203,24 @@ def fleet_table(path: str = "BENCH_fleet.json") -> str:
                     f"(to {b.get('failover_engine')}), canary checks="
                     f"{b.get('canary_checks')} mismatches="
                     f"{b.get('canary_mismatches')}")
+    can = bench.get("canary", {})
+    if can:
+        lines.append(
+            f"\nCanary drill: {can.get('start_engine')} -> "
+            f"{can.get('adopted_engine')} after "
+            f"{can.get('engine_failovers')} failover(s), "
+            f"{can.get('canary_checks')} post-failover flushes "
+            f"parity-checked, {can.get('canary_mismatches')} "
+            f"mismatches (gate: must be 0)")
     head = bench.get("headline", {})
     if head:
         lines.append(
             f"\nHeadline: numpy {head.get('numpy_speedup')}x "
             f"(pass={head.get('pass_numpy')}), engine "
             f"{head.get('engine_speedup')}x "
-            f"(pass={head.get('pass_engine')}) -> "
+            f"(pass={head.get('pass_engine')}), canary mismatches "
+            f"{head.get('canary_mismatches')} "
+            f"(pass={head.get('pass_canary')}) -> "
             f"pass={head.get('pass')}")
     return "\n".join(lines)
 
@@ -300,6 +311,64 @@ def chaos_table(path: str = "BENCH_chaos.json") -> str:
     return "\n".join(lines)
 
 
+def crash_table(path: str = "BENCH_crash_loop.json") -> str:
+    """Crash-loop drill: SIGKILLed daemon vs uninterrupted control —
+    the replay must be byte-identical and every resend a dedup hit."""
+    with open(path) as f:
+        bench = json.load(f)
+    cnt = bench.get("crash", {}).get("resilience", {})
+    lines = [
+        f"Stream: {bench.get('ops')} ops, SIGKILL at {bench.get('kills')}",
+        "\n| run | digest | journal ops |",
+        "|---|---|---|",
+        f"| control | `{bench.get('control', {}).get('digest', '')[:16]}` "
+        f"| {bench.get('control', {}).get('journal_ops')} |",
+        f"| crash-loop | `{bench.get('crash', {}).get('digest', '')[:16]}` "
+        f"| {bench.get('crash', {}).get('journal_ops')} |",
+        f"\nRecovery: {cnt.get('recovered_ops')} ops at last boot "
+        f"({cnt.get('wal_tail_ops')} from the WAL tail), "
+        f"{cnt.get('dedup_hits')} dedup hits on resend, identical="
+        f"{bench.get('identical')} -> pass={bench.get('pass')}",
+    ]
+    return "\n".join(lines)
+
+
+def failover_table(path: str = "BENCH_failover.json") -> str:
+    """Failover drill: kill -9 the primary mid-stream, promote the
+    standby, fence the resurrected stale primary."""
+    with open(path) as f:
+        bench = json.load(f)
+    h = bench.get("headline", {})
+    fo = bench.get("failover", {})
+    ack = bench.get("ack_overhead", {})
+    lines = [
+        "| run | digest | data ops | epoch |",
+        "|---|---|---|---|",
+        f"| control | `{bench.get('control', {}).get('digest', '')}` | "
+        f"{bench.get('control', {}).get('data_ops')} | 1 |",
+        f"| failover | `{fo.get('digest', '')}` | {fo.get('data_ops')} | "
+        f"{fo.get('epoch')} |",
+        f"\nFailover ({h.get('ops')} ops, SIGKILL at op "
+        f"{fo.get('kill_at_op')}): RTO {h.get('rto_ms')}ms, replication "
+        f"lag at kill {h.get('repl_lag_at_kill')} ops, acked ops lost "
+        f"{h.get('acked_ops_lost')}, resend exactly-once="
+        f"{h.get('resend_exactly_once')}",
+        f"\nFencing: stale-primary writes landed "
+        f"{h.get('fenced_writes_landed')} (journal+client sides="
+        f"{h.get('fenced_client_and_journal')})",
+    ]
+    if ack:
+        lines.append(
+            f"\nAck modes: sync p50 "
+            f"{ack.get('sync', {}).get('p50_ms')}ms vs async p50 "
+            f"{ack.get('async', {}).get('p50_ms')}ms "
+            f"(+{ack.get('overhead_p50_ms')}ms; sync standby-durable "
+            f"frac {ack.get('sync', {}).get('replicated_frac')})")
+    lines.append(f"\nHeadline: digest_identical={h.get('digest_identical')}"
+                 f" -> pass={bench.get('pass')}")
+    return "\n".join(lines)
+
+
 def bench_table(alloc_path: str = "BENCH_allocator.json",
                 eval_path: str = "BENCH_paper_eval.json") -> str:
     """Perf trajectory: placement-engine rates (BENCH_allocator.json)
@@ -343,7 +412,7 @@ def main() -> None:
     ap.add_argument("--which", default="all",
                     choices=["all", "dryrun", "roofline", "paper", "bench",
                              "fitmask", "reconfig", "fleet", "service",
-                             "chaos"])
+                             "chaos", "crash", "failover"])
     args = ap.parse_args()
     if args.which in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -379,6 +448,14 @@ def main() -> None:
             os.path.exists("BENCH_chaos.json"):
         print("\n### Chaos layer (BENCH_chaos.json)\n")
         print(chaos_table())
+    if args.which in ("all", "crash") and \
+            os.path.exists("BENCH_crash_loop.json"):
+        print("\n### Crash-loop drill (BENCH_crash_loop.json)\n")
+        print(crash_table())
+    if args.which in ("all", "failover") and \
+            os.path.exists("BENCH_failover.json"):
+        print("\n### Failover drill (BENCH_failover.json)\n")
+        print(failover_table())
 
 
 if __name__ == "__main__":

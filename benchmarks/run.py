@@ -28,12 +28,15 @@ def main() -> None:
     ap.add_argument("--skip-fleet", action="store_true")
     ap.add_argument("--skip-service", action="store_true")
     ap.add_argument("--skip-chaos", action="store_true")
+    ap.add_argument("--skip-crash", action="store_true")
+    ap.add_argument("--skip-failover", action="store_true")
     args = ap.parse_args()
     t0 = time.time()
 
-    from benchmarks import (allocator_bench, chaos_bench, fitmask_bench,
-                            fleet_bench, kernels_bench, paper_eval,
-                            reconfig_bench, roofline, service_bench)
+    from benchmarks import (allocator_bench, chaos_bench, crash_loop,
+                            failover_drill, fitmask_bench, fleet_bench,
+                            kernels_bench, paper_eval, reconfig_bench,
+                            roofline, service_bench)
 
     os.makedirs("experiments", exist_ok=True)
     if not args.skip_paper:
@@ -105,6 +108,29 @@ def main() -> None:
         else:
             chaos_bench.main(["--quick", "--out",
                               "experiments/BENCH_chaos_quick.json"])
+
+    if not args.skip_crash:
+        print("=" * 70)
+        print("## Crash-loop drill (SIGKILL recovery, digest-identical "
+              "replay)")
+        # Snapshot policy as the other benches: the tracked
+        # BENCH_crash_loop.json is the full kill schedule; CI-sized
+        # runs smoke the quick variant into experiments/.
+        if args.full:
+            crash_loop.main(["--out", "BENCH_crash_loop.json"])
+        else:
+            crash_loop.main(["--quick", "--out",
+                             "experiments/BENCH_crash_loop_quick.json"])
+
+    if not args.skip_failover:
+        print("=" * 70)
+        print("## Failover drill (kill -9 primary, fenced promotion, "
+              "replication lag)")
+        if args.full:
+            failover_drill.main(["--out", "BENCH_failover.json"])
+        else:
+            failover_drill.main(["--quick", "--out",
+                                 "experiments/BENCH_failover_quick.json"])
 
     if not args.skip_fitmask:
         print("=" * 70)

@@ -52,14 +52,16 @@ from repro.sim.scenarios import (SCENARIOS, Scenario, fault_schedule,
 from repro.eval import (PAPER_FIG3_RATIOS, PAPER_FIG4_DELTAS, PAPER_TABLE1,
                         EvalRunner, EvalTask, aggregate_by_label, fig3, fig4,
                         make_tasks, table1)
-# The allocator service.
-from repro.serve.scheduler import (RemotePolicy, Scheduler, SchedulerClient,
+# The allocator service (+ replication/fencing constants, PR 10).
+from repro.serve.scheduler import (NOT_LEADER, ROLE_PRIMARY, ROLE_STANDBY,
+                                   RemotePolicy, Scheduler, SchedulerClient,
                                    SchedulerConfig)
 
 __all__ = [
     # service
     "Scheduler", "SchedulerConfig", "SchedulerClient", "RemotePolicy",
     "submit", "events", "start_scheduler", "stop_scheduler",
+    "NOT_LEADER", "ROLE_PRIMARY", "ROLE_STANDBY",
     # engine selection + runtime failover
     "EngineConfig", "set_default_engine", "default_engine_name",
     "FAILOVER_CHAIN", "failover_candidates",

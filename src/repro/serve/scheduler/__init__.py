@@ -15,15 +15,21 @@ Most callers want :class:`Scheduler` via :mod:`repro.api`.
 """
 from __future__ import annotations
 
-from .client import RemotePolicy, SchedulerClient
+from .client import RemotePolicy, SchedulerClient, jittered_interval
 from .core import AllocatorCore, SchedulerConfig
 from .daemon import SchedulerDaemon
 from .protocol import (DROPPED, EV_FAULT, EV_MIGRATE, EV_PREEMPT,
                        EV_RECONFIG, EV_RELEASE, EV_REPAIR, EV_SETUP,
-                       MIGRATED, PLACED, PREEMPTED, QUEUED, REJECTED)
-from .service import Scheduler
+                       MIGRATED, NOT_LEADER, PLACED, PREEMPTED, QUEUED,
+                       REJECTED, ROLE_PRIMARY, ROLE_STANDBY)
+from .service import HEARTBEAT_JITTER, Scheduler
 
 __all__ = [
+    "HEARTBEAT_JITTER",
+    "NOT_LEADER",
+    "ROLE_PRIMARY",
+    "ROLE_STANDBY",
+    "jittered_interval",
     "AllocatorCore",
     "RemotePolicy",
     "Scheduler",

@@ -23,6 +23,22 @@ attempts raises ``TimeoutError``/``ConnectionError``.
 With ``lease_timeout`` configured daemon-side, call
 :meth:`start_heartbeat` (the :class:`Scheduler` facade does this
 automatically) so an idle client keeps its lease over submitted jobs.
+Pass ``jitter`` to desynchronize a fleet of heartbeaters — after a
+failover every surviving client reconnects at once, and identical
+intervals would keep hammering the new leader in lockstep forever.
+
+Failover (PR 10): the constructor accepts a single ``(host, port)``
+or a *list* of servers. A connection failure rotates to the next
+server; a ``NOT_LEADER`` refusal follows the reply's ``leader``
+redirect when present. Every reply carries the leader's fencing
+``epoch``: the client keeps the highest epoch it has witnessed,
+stamps it on every request (which force-fences any stale primary it
+reaches), and *discards* replies carrying a lower epoch — an ack
+from a superseded leader must never be surfaced as success. Combined
+with idempotent request_ids, an in-flight op rides out a leader kill
+exactly-once: the resend lands on the new leader, which either
+applies it fresh or serves the reply its replicated dedup cache
+already holds.
 
 :class:`RemotePolicy` adapts the client to the
 :class:`~repro.core.allocator.PlacementPolicy` surface, which is what
@@ -48,15 +64,36 @@ from repro.core.geometry import JobShape
 from . import protocol
 
 
+def jittered_interval(interval: float, jitter: float, u: float) -> float:
+    """Scale ``interval`` into ``[1-jitter, 1+jitter]`` of itself,
+    driven by a uniform draw ``u`` in [0, 1). Pure so the bounds are
+    unit-testable; the heartbeat thread feeds it fresh draws."""
+    jitter = max(0.0, min(1.0, jitter))
+    return interval * (1.0 + jitter * (2.0 * u - 1.0))
+
+
+def _server_list(address) -> List[Tuple[str, int]]:
+    """Accept one ``(host, port)`` or a list of them."""
+    if not address:
+        raise ValueError("need at least one scheduler address")
+    if isinstance(address[0], str):
+        return [(address[0], int(address[1]))]
+    return [(a[0], int(a[1])) for a in address]
+
+
 class SchedulerClient:
     """JSON-lines request/reply + event stream over one TCP socket."""
 
-    def __init__(self, address: Tuple[str, int], subscribe: bool = False,
+    def __init__(self, address, subscribe: bool = False,
                  connect_timeout: float = 5.0,
                  op_timeout: Optional[float] = 30.0,
                  max_retries: int = 4, backoff: float = 0.05,
                  client_id: Optional[str] = None):
-        self.address = (address[0], int(address[1]))
+        # Failover: one address or a preference-ordered server list;
+        # ``self.address`` is whichever server we are dialed into.
+        self.servers = _server_list(address)
+        self._si = 0
+        self.address = self.servers[0]
         self._want_subscribe = subscribe
         self._connect_timeout = connect_timeout
         self.op_timeout = op_timeout
@@ -71,21 +108,28 @@ class SchedulerClient:
         self._events: List[Dict[str, Any]] = []
         self._sock: Optional[socket.socket] = None
         self.retries = 0          # resend attempts that reconnected
+        # Fencing watermark: highest epoch seen in any reply. Stamped
+        # on every request; replies below it are discarded.
+        self.epoch_seen = 0
+        self.redirects = 0        # NOT_LEADER redirects followed
+        self.stale_rejections = 0  # replies dropped for a stale epoch
         self._hb_stop: Optional[threading.Event] = None
         self._hb_thread: Optional[threading.Thread] = None
         self.connect()
 
     # -- connection ----------------------------------------------------
     def connect(self) -> None:
-        """Dial (or re-dial) the daemon. Retries briefly so a client
+        """Dial (or re-dial) a daemon. Retries briefly so a client
         racing the daemon's bind — or reconnecting across a daemon
-        restart — just works. The read buffer is cleared: bytes of a
-        half-received line from the old connection must never prefix
-        the new stream (regression-tested)."""
+        restart — just works; each failed dial rotates to the next
+        server in the list (failover). The read buffer is cleared:
+        bytes of a half-received line from the old connection must
+        never prefix the new stream (regression-tested)."""
         self.close()
         deadline = time.monotonic() + self._connect_timeout
         last: Optional[Exception] = None
         while time.monotonic() < deadline:
+            self.address = self.servers[self._si % len(self.servers)]
             try:
                 self._sock = socket.create_connection(self.address,
                                                       timeout=2.0)
@@ -93,13 +137,22 @@ class SchedulerClient:
                 break
             except OSError as e:
                 last = e
+                self._si += 1
                 time.sleep(0.02)
         else:
             raise ConnectionError(
-                f"cannot reach scheduler at {self.address}: {last}")
+                f"cannot reach scheduler at any of {self.servers}: {last}")
         self._buf = bytearray()
         if self._want_subscribe:
             self._send_one("subscribe")
+
+    def _set_leader(self, leader: Tuple[str, int]) -> None:
+        """Follow a NOT_LEADER redirect: make ``leader`` the current
+        (and preferred) server, learning it if it wasn't listed."""
+        leader = (leader[0], int(leader[1]))
+        if leader not in self.servers:
+            self.servers.append(leader)
+        self._si = self.servers.index(leader)
 
     def close(self) -> None:
         if self._sock is not None:
@@ -115,16 +168,24 @@ class SchedulerClient:
             self._hb_stop = None
             self._hb_thread = None
 
-    def start_heartbeat(self, interval: float) -> None:
+    def start_heartbeat(self, interval: float,
+                        jitter: float = 0.0) -> None:
         """Renew this client's lease every ``interval`` seconds from a
         daemon thread (any request renews too — the thread only
         matters while the client is otherwise idle). Errors are
-        swallowed: a dead daemon fails the next real request."""
+        swallowed: a dead daemon fails the next real request.
+
+        ``jitter`` (0..1) spreads each wait uniformly over
+        ``interval * [1-jitter, 1+jitter]``: a fleet of clients that
+        all reconnected at a failover would otherwise renew in
+        lockstep against the new leader indefinitely."""
         self.stop_heartbeat()
         stop = self._hb_stop = threading.Event()
+        rng = random.Random()   # per-thread phase, urandom-seeded
 
         def beat() -> None:
-            while not stop.wait(interval):
+            while not stop.wait(jittered_interval(interval, jitter,
+                                                  rng.random())):
                 try:
                     self.heartbeat()
                 except (ConnectionError, TimeoutError, OSError,
@@ -202,28 +263,66 @@ class SchedulerClient:
         ``request_id`` — the daemon's dedup cache makes the retry
         exactly-once for journaled ops. ``_retries`` overrides
         ``max_retries`` for ops where retrying is pointless
-        (``shutdown`` of a daemon that already went away)."""
+        (``shutdown`` of a daemon that already went away).
+
+        Failover semantics on top (PR 10): a ``NOT_LEADER`` refusal
+        follows the reply's ``leader`` redirect (or rotates to the
+        next server) and counts as a retry; a reply whose ``epoch``
+        is *below* our watermark is discarded as if the connection
+        had failed — a superseded leader's ack is not an ack. Each
+        attempt re-stamps the request with the current watermark, so
+        any stale primary we do reach fences itself on receipt."""
         retries = self.max_retries if _retries is None else _retries
         with self._lock:
             self._seq += 1
             seq = self._seq
             msg = {"op": op, "seq": seq, "client": self.client_id,
                    "request_id": f"{self.client_id}:{seq}", **fields}
-            wire = protocol.encode(msg)
             last: Optional[Exception] = None
             for attempt in range(retries + 1):
                 if attempt:
                     self.retries += 1
                     delay = min(2.0, self.backoff * (2 ** (attempt - 1)))
                     time.sleep(delay * (0.5 + random.random()))
+                if self.epoch_seen:
+                    msg["epoch"] = self.epoch_seen
                 try:
                     if self._sock is None:
                         self.connect()
-                    self._sock.sendall(wire)
-                    return self._await_reply(seq, self.op_timeout)
+                    self._sock.sendall(protocol.encode(msg))
+                    resp = self._await_reply(seq, self.op_timeout)
                 except (ConnectionError, TimeoutError, OSError) as e:
                     last = e
                     self.close()
+                    if len(self.servers) > 1:
+                        self._si += 1   # try the next server first
+                    continue
+                ep = resp.get("epoch")
+                if ep is not None:
+                    if int(ep) < self.epoch_seen:
+                        self.stale_rejections += 1
+                        last = ConnectionError(
+                            f"discarded reply from {self.address}: "
+                            f"epoch {ep} < watermark {self.epoch_seen}")
+                        self.close()
+                        if len(self.servers) > 1:
+                            self._si += 1
+                        continue
+                    self.epoch_seen = int(ep)
+                if resp.get("not_leader") \
+                        or resp.get("error") == protocol.NOT_LEADER:
+                    self.redirects += 1
+                    last = ConnectionError(
+                        f"{self.address} is not the leader")
+                    self.close()
+                    leader = resp.get("leader")
+                    if leader and (leader[0], int(leader[1])) \
+                            != self.address:
+                        self._set_leader((leader[0], leader[1]))
+                    elif len(self.servers) > 1:
+                        self._si += 1
+                    continue
+                return resp
             assert last is not None
             raise last
 

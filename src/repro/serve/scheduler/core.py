@@ -30,6 +30,18 @@ carry a ``client`` id, which makes the submitting client the job's
 *lease holder*: ``op_lease_expire`` (journaled with its resolved
 action, so replay never depends on current config) requeues or
 releases a dead client's jobs.
+
+Replication (PR 10): the in-memory journal doubles as the replication
+log — a standby's cursor is just a journal index, served as WAL-framed
+bytes by :meth:`AllocatorCore.journal_frames` and applied on the
+standby via :meth:`AllocatorCore.apply_replicated` (replay-mode apply
++ append to the standby's *own* WAL, so a promoted standby recovers
+like any primary). Leadership is fenced by a monotonic ``epoch``
+stamped on every journal record (``"e"``): promotion journals a
+``promote`` op carrying the new epoch, so the fencing token survives
+recovery and replication by the same mechanism as everything else.
+The epoch is deliberately excluded from :meth:`state_digest` — an
+uninterrupted control run and a failover run must digest-identically.
 """
 from __future__ import annotations
 
@@ -48,7 +60,7 @@ from repro.eval.runner import save_checkpoint, shard_dir, verify_record
 from repro.sim.faults import FaultEvent, FaultInjector
 
 from . import protocol
-from .journal import JournalWriter, recover_journal
+from .journal import JournalWriter, encode_frames, recover_journal
 
 
 @dataclass
@@ -83,22 +95,51 @@ class SchedulerConfig:
     # Daemon bind address; port 0 = ephemeral (read it back after start).
     host: str = "127.0.0.1"
     port: int = 0
+    # Replication (PR 10). A "standby" daemon tails the primary at
+    # ``replicate_from`` = (host, port), refuses client writes with
+    # NOT_LEADER until promoted, and keeps a shadow core whose digest
+    # tracks the primary record-for-record.
+    role: str = "primary"            # "primary" | "standby"
+    replicate_from: Optional[Tuple[str, int]] = None
+    # Ack mode of a *primary*: "sync" holds each journaled-op reply
+    # until the standby has fsynced the record (bounded by
+    # sync_timeout, after which the op acks degraded — availability
+    # over replication when the standby is down); "async" acks after
+    # the local fsync only.
+    ack_mode: str = "async"          # "async" | "sync"
+    sync_timeout: float = 2.0
+    # Long-poll window (seconds) for follower repl_pull waits.
+    repl_poll: float = 0.5
 
     def __post_init__(self):
         self.engine = EngineConfig.coerce(self.engine)
         if self.lease_policy not in ("requeue", "release"):
             raise ValueError("lease_policy must be 'requeue' or "
                              f"'release', got {self.lease_policy!r}")
+        if self.role not in ("primary", "standby"):
+            raise ValueError("role must be 'primary' or 'standby', "
+                             f"got {self.role!r}")
+        if self.ack_mode not in ("async", "sync"):
+            raise ValueError("ack_mode must be 'async' or 'sync', "
+                             f"got {self.ack_mode!r}")
+        if self.role == "standby" and self.replicate_from is None:
+            raise ValueError("a standby needs replicate_from=(host, "
+                             "port) of the primary to tail")
+        if self.replicate_from is not None:
+            h, p = self.replicate_from
+            self.replicate_from = (str(h), int(p))
 
     # -- checkpoint-store duck-type (repro.eval.runner) ----------------
     def fingerprint(self) -> str:
         """Hash of every field that affects placement outcomes. The
         transport fields (host/port), checkpoint cadence and the
-        resilience knobs (fsync, leases, dedup, backpressure) are
-        excluded: moving the daemon or retuning snapshot frequency or
-        lease policy must not orphan its journal — lease expiries are
+        resilience knobs (fsync, leases, dedup, backpressure,
+        role/replication/ack mode) are excluded: moving the daemon,
+        retuning snapshot frequency or lease policy, or promoting a
+        standby must not orphan its journal — lease expiries are
         journaled with their *resolved* action, so replay never
-        consults the current lease_policy."""
+        consults the current lease_policy, and a primary and its
+        standby share one fingerprint (the replication stream id)."""
         fields = {"policy": self.policy, "policy_kw": self.policy_kw,
                   "backfill": self.backfill, "max_queue": self.max_queue,
                   "engine": asdict(self.engine)}
@@ -117,7 +158,7 @@ class AllocatorCore:
 
     JOURNALED = ("submit", "done", "try_place", "release",
                  "preempt", "migrate", "fault", "repair",
-                 "lease_expire")
+                 "lease_expire", "promote")
 
     def __init__(self, config: SchedulerConfig, mask_client=None):
         self.config = config
@@ -152,9 +193,16 @@ class AllocatorCore:
         self._current_rid: Optional[str] = None
         self._current_client: Optional[str] = None
         self._wal: Optional[JournalWriter] = None
+        # Fencing token: monotonic leadership epoch. Stamped as "e" on
+        # every journal record; promotion journals a bump, so the
+        # epoch recovers and replicates like all other state. NOT part
+        # of state_digest (a failover run must digest-match its
+        # uninterrupted control).
+        self.epoch = 1
         self.counters: Dict[str, int] = {
             "dedup_hits": 0, "lease_expiries": 0,
             "wal_tail_ops": 0, "wal_truncated": 0,
+            "repl_applied": 0, "promotions": 0,
         }
 
     # -- topology listener --------------------------------------------
@@ -199,6 +247,9 @@ class AllocatorCore:
             op["rid"] = self._current_rid
         if self._current_client is not None:
             op["client"] = self._current_client
+        # Fencing: every record carries the epoch it was written
+        # under, so replication and recovery both restore the token.
+        op["e"] = self.epoch
         self.journal.append(op)
         if not self.config.checkpoint_dir:
             return
@@ -319,6 +370,12 @@ class AllocatorCore:
         self.journal = [dict(op) for op in rec["journal"]]
         self.next_id = max(self.next_id, int(rec.get("next_id", 0)))
         self.recovered_ops = len(self.journal)
+        # Restore the fencing token: promote ops replayed above already
+        # bumped it; the per-record stamp covers journals whose last
+        # promotion predates the snapshot horizon (pre-PR-10 records
+        # carry no "e" — epoch 1 by definition).
+        for op in self.journal:
+            self.epoch = max(self.epoch, int(op.get("e", 1)))
 
     # -- op dispatch ---------------------------------------------------
     def apply(self, msg: Dict[str, Any]):
@@ -699,6 +756,68 @@ class AllocatorCore:
         return {"ok": True,
                 "feasible": bool(self.policy.can_ever_place(shape))}, []
 
+    # -- replication & fencing (PR 10) ----------------------------------
+    def op_promote(self, msg: Dict[str, Any]):
+        """Mint a new fencing epoch and journal the promotion. The
+        epoch is bumped *before* journaling, so the promotion record
+        is the first op of the new epoch — every daemon or standby
+        that replays or replicates it learns the new token.
+
+        A live promote mints ``max(own epoch, request's fencing
+        stamp) + 1`` — the stamp is the highest epoch the caller has
+        witnessed anywhere, so the minted token supersedes leaders
+        this daemon never heard of. Replay instead restores the
+        journaled record's epoch verbatim."""
+        if self._replaying:
+            new_epoch = int(msg.get("epoch", self.epoch + 1))
+        else:
+            new_epoch = max(self.epoch, int(msg.get("epoch", 0))) + 1
+        self.epoch = max(self.epoch, new_epoch)
+        self._journal_op({"op": "promote", "epoch": self.epoch})
+        self.counters["promotions"] += 1
+        return {"ok": True, "epoch": self.epoch, "promoted": True}, []
+
+    def journal_frames(self, index: int,
+                       limit: int = 512) -> Tuple[bytes, int]:
+        """Serve the replication stream: WAL-framed records from
+        journal ``index`` (at most ``limit`` per pull), byte-identical
+        to what the WAL holds for them. Returns ``(frames,
+        next_index)`` — the follower's new cursor."""
+        index = max(0, int(index))
+        recs = [{"i": i, **op}
+                for i, op in enumerate(self.journal[index:index + limit],
+                                       start=index)]
+        return encode_frames(recs), index + len(recs)
+
+    def apply_replicated(self, rec: Dict[str, Any]) -> Dict[str, Any]:
+        """Apply one record pulled from the leader (the standby path):
+        run it through the normal handlers in replay mode —
+        regenerating the identical reply for the dedup cache, pushing
+        no events — then append it verbatim to this core's own journal
+        *and WAL*, so a promoted standby recovers from its own disk
+        exactly like a primary would. The caller guarantees contiguity
+        (record index == len(journal))."""
+        op = {k: v for k, v in rec.items() if k != "i"}
+        self._replaying = True
+        try:
+            reply, _ = self.apply(dict(op))
+            rid = op.get("rid")
+            if rid is not None:
+                self._remember(rid, reply)
+        finally:
+            self._replaying = False
+            self._pending_topo = []
+        self.epoch = max(self.epoch, int(op.get("e", 1)))
+        self.journal.append(op)
+        self.counters["repl_applied"] += 1
+        if self.config.checkpoint_dir:
+            self._wal_writer().append({"i": len(self.journal) - 1, **op})
+            self._ops_since_sync += 1
+            if (self.config.checkpoint_every
+                    and self._ops_since_sync >= self.config.checkpoint_every):
+                self.sync_checkpoint()
+        return reply
+
     # -- introspection -------------------------------------------------
     def op_status(self, msg: Dict[str, Any]):
         return {"ok": True, **self.status()}, []
@@ -713,6 +832,7 @@ class AllocatorCore:
             "queue_depth": len(self.queue),
             "next_id": self.next_id,
             "journal_ops": len(self.journal),
+            "epoch": self.epoch,
             "state_digest": self.state_digest(),
             "resilience": {**self.counters,
                            "dedup_entries": len(self._dedup),

@@ -25,6 +25,15 @@ offset**, so the journal is again well-formed for subsequent appends;
 it never raises on a corrupt tail. Every acknowledged op precedes the
 torn one by the fsync ordering, so truncation only ever discards
 unacknowledged work.
+
+Replication (PR 10): the framing doubles as the **over-the-wire
+replication format**. :func:`encode_frames` / :func:`decode_frames`
+are the pure-bytes halves of the writer/recovery above — the primary
+daemon answers a follower's cursor with a run of framed records (no
+MAGIC; the stream id travels as the config fingerprint instead), and
+the follower applies every frame that checks out, ignoring a torn
+tail exactly as crash recovery would. One format, one parser, one set
+of torn-tail semantics for disk and wire.
 """
 from __future__ import annotations
 
@@ -36,6 +45,49 @@ from typing import Any, Dict, List, Tuple
 
 MAGIC = b"RPROWAL1"
 _HEADER = struct.Struct("<II")   # payload length, crc32(payload)
+
+
+def frame_record(rec: Dict[str, Any]) -> bytes:
+    """One framed record: ``length u32 | crc32 u32 | canonical JSON``."""
+    payload = json.dumps(rec, sort_keys=True).encode()
+    return _HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def encode_frames(records: List[Dict[str, Any]]) -> bytes:
+    """Frame a run of records for the replication stream (no MAGIC —
+    the stream identity is negotiated separately)."""
+    return b"".join(frame_record(r) for r in records)
+
+
+def scan_frames(data: bytes,
+                offset: int = 0) -> Tuple[List[Dict[str, Any]], int]:
+    """Parse framed records starting at ``offset``; stops at the first
+    short/corrupt frame. Returns ``(records, end_offset)`` where
+    ``end_offset`` is the byte just past the last intact record."""
+    records: List[Dict[str, Any]] = []
+    off = offset
+    good = off
+    while off + _HEADER.size <= len(data):
+        length, crc = _HEADER.unpack_from(data, off)
+        payload = data[off + _HEADER.size:off + _HEADER.size + length]
+        if len(payload) < length or zlib.crc32(payload) != crc:
+            break
+        try:
+            rec = json.loads(payload)
+        except ValueError:
+            break
+        records.append(rec)
+        off += _HEADER.size + length
+        good = off
+    return records, good
+
+
+def decode_frames(data: bytes) -> Tuple[List[Dict[str, Any]], bool]:
+    """Wire-side frame parse: every intact record plus a flag for
+    trailing garbage (a torn frame in a replication reply means a
+    corrupted reply — the follower re-pulls from its cursor)."""
+    records, good = scan_frames(data, 0)
+    return records, good != len(data)
 
 
 class JournalWriter:
@@ -64,9 +116,7 @@ class JournalWriter:
     def append(self, rec: Dict[str, Any]) -> None:
         """Frame + write + (optionally) fsync one record. On return
         the record is durable: a crash after ``append`` replays it."""
-        payload = json.dumps(rec, sort_keys=True).encode()
-        self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
-        self._f.write(payload)
+        self._f.write(frame_record(rec))
         self._commit()
 
     def reset(self) -> None:
@@ -104,21 +154,7 @@ def recover_journal(path: str,
             with open(path, "wb") as f:
                 f.write(MAGIC)
         return [], bool(data)
-    records: List[Dict[str, Any]] = []
-    off = len(MAGIC)
-    good = off
-    while off + _HEADER.size <= len(data):
-        length, crc = _HEADER.unpack_from(data, off)
-        payload = data[off + _HEADER.size:off + _HEADER.size + length]
-        if len(payload) < length or zlib.crc32(payload) != crc:
-            break
-        try:
-            rec = json.loads(payload)
-        except ValueError:
-            break
-        records.append(rec)
-        off += _HEADER.size + length
-        good = off
+    records, good = scan_frames(data, len(MAGIC))
     truncated = good != len(data)
     if truncated and repair:
         with open(path, "r+b") as f:

@@ -31,6 +31,51 @@ Resilience fields (PR 9) — every request may additionally carry:
                       request renews the lease) and requeues or
                       releases their jobs per ``lease_policy``.
 
+Replication & fencing fields (PR 10):
+
+  ``epoch``           the monotonic **fencing token**. Every reply
+                      carries the daemon's current epoch; clients
+                      remember the highest epoch they have witnessed
+                      and stamp it on every request. A daemon that
+                      receives a request stamped with a *higher* epoch
+                      than its own has provably been superseded (a new
+                      leader was promoted while it was paused, dead,
+                      or partitioned): it fences itself and refuses
+                      every state-changing op with ``NOT_LEADER`` —
+                      nothing reaches its journal, so a stale primary
+                      can never double-place. Symmetrically a client
+                      that sees a reply with a *lower* epoch than its
+                      watermark discards it and fails over.
+  ``NOT_LEADER``      error code on refused writes; the reply carries
+                      ``leader`` = [host, port] when the daemon knows
+                      where the current leader lives, so clients can
+                      follow the redirect instead of scanning their
+                      server list.
+
+Replication ops:
+
+  ``repl_pull``       fingerprint, index, acked, wait — a follower's
+                      cursor into the leader's op log. The reply holds
+                      ``frames`` (base64 of WAL-framed records from
+                      ``index``; the PR 9 on-disk framing *is* the
+                      replication format), ``next`` (the follower's
+                      new cursor) and the leader's ``epoch``.
+                      ``acked`` piggybacks the follower's durable
+                      index — in sync ack mode the leader holds client
+                      acks until the standby has fsynced the op.
+                      ``wait`` long-polls: the reply is deferred until
+                      new records exist (or a timeout), so a warm
+                      standby tails record-for-record without busy
+                      polling. A fingerprint mismatch is refused: a
+                      follower must never apply another config's log.
+  ``promote``         mint a new fencing epoch (old + 1, journaled) and
+                      become leader. On a standby this stops the
+                      replication tail first; the promotion record is
+                      the first op of the new epoch.
+  ``fence``           epoch, leader — best-effort notice to an old
+                      primary that a higher epoch exists; it fences
+                      itself exactly as a stamped request would force.
+
 Request ops (``{"op": ..., "seq": n, ...fields}``):
 
   ``submit``          shape=[a,b,c], optional job_id → outcome
@@ -87,6 +132,15 @@ REJECTED = "rejected"    # admission control: queue full (overload)
 # Eviction outcomes (preempt/migrate/fault victims).
 PREEMPTED = "preempted"  # evicted, re-queued at the head
 MIGRATED = "migrated"    # evicted and re-placed immediately
+
+# Fencing: error code a superseded (or standby) daemon answers
+# state-changing ops with; the reply may carry ``leader`` = [host,
+# port] for the client to follow.
+NOT_LEADER = "NOT_LEADER"
+
+# Daemon roles.
+ROLE_PRIMARY = "primary"
+ROLE_STANDBY = "standby"
 
 # Pushed event names (models-on-the-move spelling).
 EV_SETUP = "SETUP"

@@ -8,6 +8,13 @@ without touching asyncio. It is also the crash-recovery harness:
 :meth:`kill` tears the daemon down *without* a final checkpoint, and a
 new ``Scheduler`` on the same ``checkpoint_dir`` recovers by journal
 replay.
+
+Replication (PR 10): construct with ``role="standby"`` and
+``replicate_from=primary.address`` for a warm standby that tails the
+primary's journal; :meth:`promote` makes it the fenced leader. The
+facade's auto-heartbeat is jittered (``HEARTBEAT_JITTER``) so a fleet
+of facade clients that reconnect together after a failover spreads
+its renewals instead of hitting the new leader in lockstep.
 """
 from __future__ import annotations
 
@@ -17,6 +24,12 @@ from typing import Any, Dict, List, Optional
 from .client import RemotePolicy, SchedulerClient
 from .core import SchedulerConfig
 from .daemon import SchedulerDaemon
+
+# Fractional spread of the auto-heartbeat interval (see
+# SchedulerClient.start_heartbeat): each wait is drawn uniformly from
+# interval * [1-J, 1+J]. 0.25 keeps the shortest wait well above the
+# lease-renewal deadline (interval is lease_timeout / 3).
+HEARTBEAT_JITTER = 0.25
 
 
 class Scheduler:
@@ -60,7 +73,8 @@ class Scheduler:
         third of the lease timeout — an idle handle must not lose its
         jobs to the expiry loop."""
         if self.config.lease_timeout:
-            client.start_heartbeat(self.config.lease_timeout / 3.0)
+            client.start_heartbeat(self.config.lease_timeout / 3.0,
+                                   jitter=HEARTBEAT_JITTER)
 
     def _run(self) -> None:
         import asyncio
@@ -168,3 +182,8 @@ class Scheduler:
 
     def sync(self) -> Dict[str, Any]:
         return self.client.sync()
+
+    def promote(self) -> Dict[str, Any]:
+        """Make this daemon the leader: stop tailing (if a standby),
+        mint + journal a new fencing epoch, start expiring leases."""
+        return self.client.call("promote")

@@ -1,7 +1,9 @@
-"""Resilience tests (PR 9): WAL framing + torn-tail truncation,
+"""Resilience tests (PR 9/10): WAL framing + torn-tail truncation,
 checkpoint-shard corruption, idempotent retries across daemon crashes,
 lease expiry dispositions, SIGKILL crash-loop recovery, broker stepper
-watchdog, and the engine failover chain."""
+watchdog, the engine failover chain — and the replicated scheduler:
+standby WAL tailing, epoch-fenced promotion, NOT_LEADER redirects,
+stale-reply rejection, sync/async ack modes, heartbeat jitter."""
 import os
 import random
 import signal
@@ -19,9 +21,10 @@ from repro.api import (Scheduler, SchedulerClient, SchedulerConfig,
                        failover_candidates)
 from repro.eval.runner import record_crc, shard_dir, verify_record
 from repro.kernels.fitmask import ops
-from repro.serve.scheduler import PLACED, protocol
+from repro.serve.scheduler import PLACED, jittered_interval, protocol
 from repro.serve.scheduler.journal import (MAGIC, JournalWriter,
-                                           recover_journal)
+                                           decode_frames, encode_frames,
+                                           frame_record, recover_journal)
 from repro.sim.fleet import QueryBroker
 
 SMALL = dict(num_xpus=64, cube_n=4)      # one 4^3 cube: trivially full
@@ -80,6 +83,42 @@ def test_wal_bitflip_stops_at_corrupt_record(tmp_path):
         f.write(data)
     got, truncated = recover_journal(path)
     assert got == recs[:2] and truncated
+
+
+def test_frames_roundtrip_and_torn_flag():
+    """The wire-side halves of the framing: every intact record comes
+    back, a torn trailing frame only sets the flag."""
+    recs = [{"op": "submit", "i": i, "shape": [4, 4, i + 1]}
+            for i in range(4)]
+    blob = encode_frames(recs)
+    assert decode_frames(blob) == (recs, False)
+    assert decode_frames(blob + frame_record(recs[0])[:7]) == (recs, True)
+    assert decode_frames(b"") == ([], False)
+
+
+def test_torn_tail_every_byte_offset(tmp_path):
+    """Exhaustive torn-tail sweep: truncate the WAL at *every* byte
+    offset strictly inside the last record; recovery must yield
+    exactly the acked prefix (all records but the last), flagged as
+    truncated, at every single offset."""
+    recs = [{"op": "submit", "i": i, "pad": "x" * (3 * i)}
+            for i in range(4)]
+    whole = MAGIC + encode_frames(recs)
+    last_start = len(MAGIC) + len(encode_frames(recs[:-1]))
+    path = str(tmp_path / "torn.wal")
+    for cut in range(last_start + 1, len(whole)):
+        with open(path, "wb") as f:
+            f.write(whole[:cut])
+        got, truncated = recover_journal(path, repair=False)
+        assert got == recs[:-1], f"cut at byte {cut}"
+        assert truncated, f"cut at byte {cut} not flagged"
+    # And with repair: the file is truncated back to the acked prefix
+    # and a re-recovery is clean.
+    with open(path, "wb") as f:
+        f.write(whole[:len(whole) - 1])
+    assert recover_journal(path, repair=True) == (recs[:-1], True)
+    assert os.path.getsize(path) == last_start
+    assert recover_journal(path) == (recs[:-1], False)
 
 
 def test_wal_foreign_header_ignored_wholesale(tmp_path):
@@ -530,3 +569,259 @@ def test_custom_engine_instance_is_failover_exempt():
     with pytest.raises(RuntimeError, match="boom"):
         broker.free_counts(_occ(np.random.default_rng(4), 1))
     assert broker.stats.engine_failovers == 0
+
+
+# --------------------------------------- replicated scheduler (PR 10)
+def _pair(tmp_path, **primary_kw):
+    """A primary + warm standby on private checkpoint stores."""
+    pri = Scheduler(SchedulerConfig(
+        policy="rfold", policy_kw=MEDIUM, checkpoint_every=3,
+        checkpoint_dir=str(tmp_path / "pri"), repl_poll=0.1,
+        **primary_kw)).start()
+    sby = Scheduler(SchedulerConfig(
+        policy="rfold", policy_kw=MEDIUM, checkpoint_every=3,
+        checkpoint_dir=str(tmp_path / "sby"), repl_poll=0.1,
+        role="standby", replicate_from=pri.address,
+        **primary_kw)).start()
+    return pri, sby
+
+
+def _await_repl(sby, n_ops, deadline=10.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        st = sby.status()
+        if st["journal_ops"] >= n_ops:
+            return st
+        time.sleep(0.02)
+    raise AssertionError(f"standby never reached {n_ops} ops")
+
+
+def _await_follower(pri, deadline=10.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        if pri.status()["repl"]["follower_live"]:
+            return
+        time.sleep(0.02)
+    raise AssertionError("standby never pulled from the primary")
+
+
+def test_standby_tails_primary_digest_tracks(tmp_path):
+    """The replication stream: every journaled op the primary acks
+    shows up on the standby, whose state digest tracks the primary's
+    record-for-record."""
+    pri, sby = _pair(tmp_path)
+    try:
+        for dims in _SHAPES[:5]:
+            pri.submit(dims)
+        pri.done(1)
+        sp = pri.status()
+        ss = _await_repl(sby, sp["journal_ops"])
+        assert ss["state_digest"] == sp["state_digest"]
+        assert ss["journal_ops"] == sp["journal_ops"]
+        assert ss["resilience"]["repl_applied"] == sp["journal_ops"]
+        assert ss["role"] == "standby" and sp["role"] == "primary"
+    finally:
+        sby.kill()
+        pri.kill()
+
+
+def test_standby_refuses_writes_and_redirects(tmp_path):
+    """A standby answers writes with NOT_LEADER + the primary's
+    address; a client pointed only at the standby follows the
+    redirect and the op lands on the primary exactly once."""
+    pri, sby = _pair(tmp_path)
+    c = SchedulerClient(sby.address, client_id="redir", backoff=0.01)
+    try:
+        r = c.submit((4, 4, 4))
+        assert r["outcome"] == PLACED
+        assert c.redirects >= 1
+        assert tuple(c.address) == tuple(pri.address)
+        assert pri.status()["journal_ops"] == 1
+        st = _await_repl(sby, 1)
+        assert st["journal_ops"] == 1   # via replication, not the write
+    finally:
+        c.close()
+        sby.kill()
+        pri.kill()
+
+
+def test_promotion_fences_old_primary_journal_side(tmp_path):
+    """After a promotion, a request stamped with the new epoch makes
+    the old primary fence itself: the write is refused and nothing
+    reaches its journal — the no-double-place invariant."""
+    pri, sby = _pair(tmp_path)
+    c = SchedulerClient([pri.address, sby.address], client_id="fence",
+                        backoff=0.01)
+    try:
+        for dims in _SHAPES[:3]:
+            assert c.submit(dims)["ok"]
+        _await_repl(sby, 3)
+        pr = sby.promote()
+        assert pr["promoted"] and pr["epoch"] == 2
+        ops_before = pri.status()["journal_ops"]
+        stale = SchedulerClient(pri.address, client_id="stale",
+                                max_retries=0)
+        stale.epoch_seen = pr["epoch"]   # witnessed the new leader
+        with pytest.raises(ConnectionError):
+            stale._request("submit", shape=[2, 2, 2])
+        stale.close()
+        sp = pri.status()
+        assert sp["fenced"]
+        assert sp["repl"]["fenced_rejections"] >= 1
+        assert sp["journal_ops"] == ops_before   # zero fenced writes
+    finally:
+        c.close()
+        sby.kill()
+        pri.kill()
+
+
+def test_client_discards_stale_epoch_reply():
+    """Client-side fencing: a reply whose epoch is below the client's
+    watermark is discarded like a connection failure — a superseded
+    leader's ack is not an ack."""
+    srv = __import__("socket").socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(4)
+    address = srv.getsockname()[:2]
+    done = threading.Event()
+
+    def stale_leader():
+        while not done.is_set():
+            try:
+                conn, _ = srv.accept()
+            except OSError:
+                return
+            with conn, conn.makefile("rb") as f:
+                for line in f:
+                    msg = protocol.decode(line)
+                    conn.sendall(protocol.encode(
+                        {"ok": True, "seq": msg.get("seq"), "epoch": 1,
+                         "outcome": PLACED, "job_id": 0}))
+
+    t = threading.Thread(target=stale_leader, daemon=True)
+    t.start()
+    c = SchedulerClient(address, client_id="wm", max_retries=1,
+                        backoff=0.01)
+    try:
+        c.epoch_seen = 3   # witnessed a newer leader elsewhere
+        with pytest.raises(ConnectionError, match="epoch"):
+            c._request("submit", shape=[2, 2, 2])
+        assert c.stale_rejections >= 1
+    finally:
+        done.set()
+        srv.close()
+        c.close()
+
+
+def test_leader_kill_failover_exactly_once_digest_identical(tmp_path):
+    """The acceptance scenario in miniature: kill the primary
+    mid-stream, promote the standby, resend the last acked rid (the
+    replicated dedup cache absorbs it), finish the stream — the final
+    digest is byte-identical to an uninterrupted control run."""
+    pri, sby = _pair(tmp_path, ack_mode="sync", sync_timeout=2.0)
+    c = SchedulerClient([pri.address, sby.address], client_id="fo",
+                        backoff=0.02)
+    try:
+        _await_follower(pri)
+        replies = {}
+        for i, dims in enumerate(_SHAPES[:4]):
+            r = c._request("submit", request_id=f"fo:{i}",
+                           shape=list(dims))
+            assert r["ok"] and r["replicated"], r
+            replies[i] = r
+        pri.kill()   # no final checkpoint; clients see a dead socket
+        assert sby.promote()["epoch"] == 2
+        # Replay the in-flight rid: exactly-once across the failover.
+        before = c._request("status")
+        r2 = c._request("submit", request_id="fo:3",
+                        shape=list(_SHAPES[3]))
+        after = c._request("status")
+        assert r2["job_id"] == replies[3]["job_id"]
+        assert after["state_digest"] == before["state_digest"]
+        assert after["resilience"]["dedup_hits"] >= 1
+        assert c.epoch_seen == 2
+        for i, dims in enumerate(_SHAPES[4:], start=4):
+            assert c._request("submit", request_id=f"fo:{i}",
+                              shape=list(dims))["ok"]
+        final = c._request("status")
+    finally:
+        c.close()
+        sby.kill()
+    control = Scheduler(SchedulerConfig(policy="rfold",
+                                        policy_kw=MEDIUM)).start()
+    for dims in _SHAPES:
+        control.submit(dims)
+    digest = control.status()["state_digest"]
+    control.stop()
+    assert final["state_digest"] == digest
+
+
+def test_sync_ack_degrades_without_follower(tmp_path):
+    """ack_mode=sync with no live standby must not stall the service:
+    the op acks degraded (replicated=False) and the timeout is
+    counted."""
+    cfg = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                          ack_mode="sync", sync_timeout=0.2)
+    s = Scheduler(cfg).start()
+    try:
+        t0 = time.monotonic()
+        r = s.submit((4, 4, 4))
+        assert time.monotonic() - t0 < 1.0   # no follower: no wait
+        assert r["ok"] and r["replicated"] is False
+        assert s.status()["repl"]["sync_timeouts"] >= 1
+    finally:
+        s.stop()
+
+
+def test_promoted_standby_recovers_epoch_from_own_wal(tmp_path):
+    """The fencing token is journaled state: a promoted standby that
+    crashes recovers its epoch (and state) from its own WAL."""
+    pri, sby = _pair(tmp_path)
+    try:
+        for dims in _SHAPES[:3]:
+            pri.submit(dims)
+        sp = pri.status()
+        _await_repl(sby, sp["journal_ops"])
+        pri.kill()
+        assert sby.promote()["epoch"] == 2
+        want = sby.status()
+        sby.kill()
+        s2 = Scheduler(SchedulerConfig(
+            policy="rfold", policy_kw=MEDIUM, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path / "sby"))).start()
+        st = s2.status()
+        s2.kill()
+        assert st["epoch"] == 2
+        assert st["state_digest"] == want["state_digest"]
+        assert st["journal_ops"] == want["journal_ops"]
+    finally:
+        pass
+
+
+def test_heartbeat_jitter_bounds():
+    """The jittered interval stays inside [1-j, 1+j] of the base for
+    any draw, degenerates to the base at jitter=0, and clamps bad
+    jitter values instead of going negative."""
+    for u in (0.0, 0.25, 0.5, 0.999):
+        assert jittered_interval(3.0, 0.0, u) == 3.0
+        v = jittered_interval(3.0, 0.25, u)
+        assert 3.0 * 0.75 <= v <= 3.0 * 1.25
+    assert jittered_interval(3.0, 0.25, 0.0) == pytest.approx(2.25)
+    assert jittered_interval(3.0, 5.0, 0.0) == pytest.approx(0.0)
+    assert jittered_interval(3.0, -1.0, 0.7) == 3.0
+
+
+def test_config_validates_replication_fields():
+    with pytest.raises(ValueError, match="role"):
+        SchedulerConfig(role="observer")
+    with pytest.raises(ValueError, match="ack_mode"):
+        SchedulerConfig(ack_mode="paxos")
+    with pytest.raises(ValueError, match="replicate_from"):
+        SchedulerConfig(role="standby")
+    # Replication knobs never change the checkpoint identity: a
+    # standby shares the primary's fingerprint (the stream id).
+    a = SchedulerConfig(policy="rfold", policy_kw=MEDIUM)
+    b = SchedulerConfig(policy="rfold", policy_kw=MEDIUM,
+                        role="standby", replicate_from=("h", 1),
+                        ack_mode="sync")
+    assert a.fingerprint() == b.fingerprint()
